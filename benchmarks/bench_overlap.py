@@ -1,0 +1,43 @@
+"""Adaptive overlap factor — the paper's §3.2.1 headline.
+
+The paper reports that with Ω=4 preset and ε=1.8, the adaptive assignment
+lands at an average of 1.93 subsets/vector — a 51.8% reduction in
+redundant build work vs the fixed-Ω baseline, while preserving recall.
+This bench sweeps ε on a skewed (ISD3B-like) and a manifold (SIFT-like)
+dataset and reports avg overlap + the reduction vs fixed Ω=4 assignment.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_fit
+from repro.core.partition import PartitionConfig, estimate_num_partitions, partition_all
+from repro.data.datasets import DATASETS
+
+
+def run(out_rows: list[dict], *, quick: bool = False) -> None:
+    n = 8_000 if quick else 20_000
+    omega = 4
+    for name in (["isd3b"] if quick else ["isd3b", "sift1m"]):
+        spec = DATASETS[name]
+        x = spec.generate(n, seed=2).astype(np.float32)
+        gamma = n // 6
+        phi = estimate_num_partitions(n, gamma, omega)
+        cent = np.asarray(
+            kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(x[:8192]), phi, max_iters=12).centroids
+        )
+        for eps in ([1.8] if quick else [1.2, 1.5, 1.8, 2.5]):
+            res = partition_all(
+                x, cent,
+                PartitionConfig(gamma=gamma, omega=omega, eps=eps, chunk_size=4096),
+            )
+            out_rows.append(dict(
+                bench="overlap", dataset=name, eps=eps, omega=omega,
+                avg_overlap=round(res.avg_overlap, 3),
+                reduction_vs_fixed=round(1 - res.avg_overlap / omega, 3),
+                max_subset=int(res.sizes.max()), gamma=gamma,
+                fallbacks=res.fallback_count,
+            ))

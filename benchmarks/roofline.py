@@ -1,0 +1,130 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONL artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline > /tmp/roofline.md
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+
+def _lm_param_counts(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts for the LM configs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import init_lm_params
+
+    shapes = jax.eval_shape(
+        lambda k: init_lm_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    total = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        per_expert = 3 * cfg.d_model * cfg.moe.d_ff_expert * cfg.n_layers
+        routed_total = cfg.moe.n_experts * per_expert
+        routed_active = cfg.moe.top_k * per_expert
+        active = total - routed_total + routed_active
+    return float(total), float(active)
+
+
+def _model_flops(cfg, shape, n_active: float) -> float | None:
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    if shape.kind == "decode":
+        return 2.0 * n_active * shape.global_batch  # one token per sequence
+    return None
+
+
+def load(mesh: str, results_dir: str = "benchmarks/results") -> list[dict]:
+    path = os.path.join(results_dir, f"dryrun_{mesh}.jsonl")
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = [
+        f"**Mesh `{mesh}`** — "
+        + ("(2, 16, 16) pod×data×model, 512 chips" if mesh == "multi"
+           else "(16, 16) data×model, 256 chips"),
+        "",
+        "| arch | shape | status | bottleneck | HBM/chip | fits 16G | "
+        "collectives (MB/chip) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | **skip** | — | — | — | "
+                f"{r['skip_reason'][:60]}… |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | {r['error'][:60]} |")
+            continue
+        coll = ", ".join(
+            f"{k.replace('collective-','c-')}:{v['bytes']/1e6:.0f}"
+            for k, v in r["collectives"].items() if v["bytes"]
+        ) or "—"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['bottleneck']} | "
+            f"{r['peak_hbm_bytes']/2**30:.2f} GiB | "
+            f"{'✓' if r['fits_hbm'] else '✗'} | {coll} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str = "single") -> str:
+    from repro.configs import get_config
+
+    rows = load(mesh)
+    out = [
+        "| arch | shape | t_compute | t_memory | t_collective | bound | "
+        "roofline frac | MODEL_FLOPS/HLO |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            continue
+        cfg = get_config(r["arch"])
+        ratio = ""
+        if cfg.family == "lm":
+            shape = next(s for s in cfg.shapes if s.name == r["shape"])
+            total, active = _lm_param_counts(cfg)
+            mf = _model_flops(cfg, shape, active)
+            if mf:
+                hlo_global = r["flops_per_device"] * r["n_chips"]
+                ratio = f"{mf / hlo_global:.2f}"
+        frac = r["t_compute_s"] / max(
+            r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['bottleneck']} | {frac:.3f} | {ratio} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("## §Dry-run\n")
+    for mesh in ("single", "multi"):
+        print(dryrun_table(mesh))
+        print()
+    print("## §Roofline (single-pod, per-chip seconds; v5e: 197 TF/s bf16, "
+          "819 GB/s HBM, 50 GB/s ICI)\n")
+    print(roofline_table("single"))
+
+
+if __name__ == "__main__":
+    main()

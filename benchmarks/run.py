@@ -1,0 +1,69 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived``-style CSV rows (full row dicts) and
+writes benchmarks/results/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+BENCHES = ["datasets", "scheduling", "overlap", "scalability", "kernels", "construction"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=BENCHES)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_construction,
+        bench_datasets,
+        bench_kernels,
+        bench_overlap,
+        bench_scalability,
+        bench_scheduling,
+    )
+
+    mods = {
+        "datasets": bench_datasets,
+        "scheduling": bench_scheduling,
+        "overlap": bench_overlap,
+        "scalability": bench_scalability,
+        "kernels": bench_kernels,
+        "construction": bench_construction,
+    }
+    rows: list[dict] = []
+    for name in BENCHES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"## bench: {name}", flush=True)
+        mods[name].run(rows, quick=args.quick)
+        print(f"## bench {name} done in {time.time()-t0:.1f}s", flush=True)
+
+    # CSV-ish output: header per bench group
+    last = None
+    for r in rows:
+        keys = list(r.keys())
+        if keys != last:
+            print(",".join(keys))
+            last = keys
+        print(",".join(str(r[k]) for k in keys))
+
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/bench_results.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} result rows → benchmarks/results/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""repro — SOGAIC: Scalable Overload-Aware Graph-Based ANNS Index Construction.
+
+A production-grade JAX framework reproducing and extending
+
+    Shi et al., "Scalable Overload-Aware Graph-Based Index Construction for
+    10-Billion-Scale Vector Similarity Search", WWW Companion '25.
+
+Public API surface (stable):
+
+    repro.core       — partitioning (Algorithm 1), k-means, PQ, graph build,
+                       agglomerative merge, scheduling, beam search, pipeline
+    repro.data       — dataset registry, synthetic generators, LID, loaders
+    repro.distributed— mesh-aware sharded steps + cluster simulation
+    repro.kernels    — Pallas TPU kernels with jnp oracles
+    repro.models     — assigned architecture model definitions
+    repro.configs    — per-architecture configs (``get_config(arch_id)``)
+    repro.launch     — mesh construction, dry-run, train/serve/build drivers
+"""
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "core",
+    "data",
+    "distributed",
+    "kernels",
+    "models",
+    "configs",
+    "launch",
+    "training",
+    "checkpoint",
+]

@@ -1,0 +1,5 @@
+"""Atomic, manifest-based checkpointing for multi-stage builds and training."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,50 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the architecture's config object; each
+config module also defines its shape cells (the assigned input shapes).
+"""
+
+from repro.configs.base import (
+    ARCH_REGISTRY,
+    GNNConfig,
+    GNNShape,
+    LMConfig,
+    LMShape,
+    MoESpec,
+    RecsysConfig,
+    RecsysShape,
+    SogaicCellConfig,
+    get_config,
+    list_archs,
+    register,
+)
+
+# importing the modules registers the configs
+from repro.configs import (  # noqa: F401  (registration side-effects)
+    deepseek_v2_236b,
+    moonshot_v1_16b_a3b,
+    llama3_2_3b,
+    smollm_360m,
+    phi3_mini_3_8b,
+    gat_cora,
+    deepfm,
+    two_tower_retrieval,
+    xdeepfm,
+    fm,
+    sogaic,
+)
+
+__all__ = [
+    "ARCH_REGISTRY",
+    "get_config",
+    "list_archs",
+    "register",
+    "LMConfig",
+    "LMShape",
+    "MoESpec",
+    "GNNConfig",
+    "GNNShape",
+    "RecsysConfig",
+    "RecsysShape",
+    "SogaicCellConfig",
+]

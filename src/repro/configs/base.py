@@ -1,0 +1,290 @@
+"""Config dataclasses + registry for all assigned architectures.
+
+Every architecture file instantiates one of these and registers it.  The
+launcher selects with ``--arch <id>``; the dry-run iterates
+``cfg.shapes`` (each a named input-shape cell from the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+__all__ = [
+    "MoESpec",
+    "LMConfig",
+    "LMShape",
+    "GNNConfig",
+    "GNNShape",
+    "RecsysConfig",
+    "RecsysShape",
+    "SogaicCellConfig",
+    "register",
+    "get_config",
+    "list_archs",
+    "ARCH_REGISTRY",
+]
+
+ARCH_REGISTRY: dict[str, Any] = {}
+
+
+def register(cfg: Any) -> Any:
+    ARCH_REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> Any:
+    if arch_id not in ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_REGISTRY)}")
+    return ARCH_REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCH_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    skip_reason: str | None = None  # e.g. long_500k on full-attention archs
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    arch_id: str
+    family: str = dataclasses.field(default="lm", init=False)
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    n_kv_heads: int = 12
+    d_head: int = 64
+    d_ff: int = 3072
+    vocab: int = 32000
+    attn: str = "gqa"  # "gqa" (covers MHA/MQA) | "mla"
+    # MLA dims (DeepSeek-V2)
+    mla_kv_lora: int = 512
+    mla_q_lora: int = 0  # 0 → direct q projection
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    moe: MoESpec | None = None
+    dtype: str = "bfloat16"
+    shapes: tuple[LMShape, ...] = ()
+    # training substrate knobs
+    remat: bool = True
+    moment_dtype: str = "float32"  # optimizer m/v dtype ("bfloat16" for 236B)
+    attn_chunk: int = 512  # query-chunked attention block
+    # activation-sharding constraints (set by the launcher; None = off).
+    # GSPMD does not reliably propagate batch sharding through the layer
+    # scan + chunked attention, so the model pins activations explicitly.
+    act_dp: tuple = None  # batch-parallel axes, e.g. ("pod", "data")
+    act_tp: str = None  # tensor-parallel axis name ("model")
+    # Megatron-style sequence-parallel residual stream: shards the per-layer
+    # remat residual stack TP-ways but adds per-layer k/v all-gathers.  On
+    # archs that fit HBM without it, turning it off trades memory for a
+    # large collective-term reduction (see EXPERIMENTS.md §Perf, llama).
+    seq_parallel: bool = True
+    # gradient-accumulation microbatches: shrinks every activation /
+    # remat-residual buffer by this factor at the cost of one extra
+    # gradient buffer (sharded like the params)
+    microbatches: int = 1
+    grad_accum_dtype: str = "float32"  # 'bfloat16' halves the accumulator
+    grad_clip: float = 1.0  # 0 disables the global-norm sync (saves a full
+    # f32 materialization of every gradient at the clip barrier)
+
+    def reduced(self, **overrides) -> "LMConfig":
+        """A small same-family config for CPU smoke tests."""
+        moe = self.moe
+        if moe is not None:
+            moe = dataclasses.replace(
+                moe,
+                n_experts=min(moe.n_experts, 8),
+                top_k=min(moe.top_k, 2),
+                d_ff_expert=64,
+            )
+        base = dataclasses.replace(
+            self,
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_head=16,
+            d_ff=128,
+            vocab=512,
+            moe=moe,
+            mla_kv_lora=32,
+            mla_q_lora=0,
+            qk_nope_dim=16,
+            qk_rope_dim=8,
+            v_head_dim=16,
+            dtype="float32",
+            attn_chunk=32,
+            shapes=(),
+            microbatches=1,
+            grad_accum_dtype="float32",
+            grad_clip=1.0,
+            moment_dtype="float32",
+        )
+        return dataclasses.replace(base, **overrides)
+
+
+LM_SHAPES_FULL_ATTN = (
+    LMShape("train_4k", "train", 4096, 256),
+    LMShape("prefill_32k", "prefill", 32768, 32),
+    LMShape("decode_32k", "decode", 32768, 128),
+    LMShape(
+        "long_500k", "decode", 524288, 1,
+        skip_reason="pure full-attention arch — 512k decode requires "
+        "sub-quadratic attention (see DESIGN.md §5)",
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNShape:
+    name: str
+    kind: str  # "full_graph" | "minibatch" | "batched_small"
+    n_nodes: int
+    n_edges: int
+    d_feat: int
+    n_classes: int = 47
+    batch_nodes: int = 0  # minibatch only
+    fanout: tuple[int, ...] = ()
+    n_graphs: int = 0  # batched_small only
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    arch_id: str
+    family: str = dataclasses.field(default="gnn", init=False)
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    aggregator: str = "attn"
+    shapes: tuple[GNNShape, ...] = ()
+    dtype: str = "float32"
+    # node-shard layer outputs over these axes (reduce-scatter the segment
+    # accumulation instead of all-reducing the full node table): −29% on the
+    # memory term for ogb_products (§Perf) — set by the launcher
+    act_dp: tuple = None
+
+    def reduced(self, **overrides) -> "GNNConfig":
+        return dataclasses.replace(self, d_hidden=4, n_heads=2, shapes=(), **overrides)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysShape:
+    name: str
+    kind: str  # "train" | "serve" | "retrieval"
+    batch: int
+    n_candidates: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    arch_id: str
+    family: str = dataclasses.field(default="recsys", init=False)
+    model: str = "deepfm"  # deepfm | xdeepfm | fm | two_tower
+    n_sparse: int = 39
+    n_dense: int = 13
+    embed_dim: int = 10
+    mlp: tuple[int, ...] = (400, 400, 400)
+    cin_layers: tuple[int, ...] = ()
+    tower_mlp: tuple[int, ...] = ()
+    vocab_sizes: tuple[int, ...] = ()  # per sparse field
+    n_items: int = 0  # two-tower candidate vocab
+    dtype: str = "float32"
+    shapes: tuple[RecsysShape, ...] = ()
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    def reduced(self, **overrides) -> "RecsysConfig":
+        n_sparse = min(self.n_sparse, 6)
+        return dataclasses.replace(
+            self,
+            n_sparse=n_sparse,
+            embed_dim=4,
+            mlp=tuple(min(m, 32) for m in self.mlp),
+            cin_layers=tuple(min(c, 8) for c in self.cin_layers),
+            tower_mlp=tuple(min(m, 32) for m in self.tower_mlp),
+            vocab_sizes=tuple([97, 101, 89, 50, 31, 64][:n_sparse]),
+            n_items=256 if self.n_items else 0,
+            shapes=(),
+            **overrides,
+        )
+
+
+def criteo_like_vocabs(n_fields: int, *, total: int = 33_762_577, seed: int = 7) -> tuple[int, ...]:
+    """Heterogeneous per-field vocab sizes (power-law, Criteo-like): a few
+    huge id spaces plus many small categorical fields, normalized to a
+    realistic total row count."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    raw = np.sort(rng.pareto(0.65, size=n_fields) + 1.0)[::-1]
+    sizes = np.maximum((raw / raw.sum() * total).astype(np.int64), 4)
+    return tuple(int(s) for s in sizes)
+
+
+RECSYS_SHAPES = (
+    RecsysShape("train_batch", "train", 65_536),
+    RecsysShape("serve_p99", "serve", 512),
+    RecsysShape("serve_bulk", "serve", 262_144),
+    RecsysShape("retrieval_cand", "retrieval", 1, n_candidates=1_000_000),
+)
+
+
+# ---------------------------------------------------------------------------
+# SOGAIC (the paper's own workload) — dry-run cells for the pipeline stages
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SogaicCellConfig:
+    arch_id: str
+    family: str = dataclasses.field(default="sogaic", init=False)
+    dim: int = 512
+    phi: int = 4096  # centroids (Φ) — multiple of TP
+    gamma: int = 1_048_576  # Γ per subset
+    omega: int = 4
+    eps: float = 1.8
+    k_cand: int = 32
+    r: int = 64
+    knn_k: int = 96
+    pq_m: int = 64
+    pq_codes: int = 256
+    chunk_b: int = 1_048_576  # vectors per global assign/encode chunk
+    build_subset: int = 65_536  # bucketed subset rows per device build cell
+    merge_nodes: int = 2_097_152  # overlap rows re-pruned per merge step
+    shapes: tuple[str, ...] = ("assign", "knn", "build", "merge", "pq_encode")

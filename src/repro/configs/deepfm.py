@@ -1,0 +1,20 @@
+"""deepfm [recsys] — arXiv:1703.04247.
+
+39 sparse fields, embed_dim 10, deep MLP 400-400-400, FM interaction.
+Criteo-like heterogeneous vocab sizes (~33.7M total rows).
+"""
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig, criteo_like_vocabs, register
+
+CONFIG = register(
+    RecsysConfig(
+        arch_id="deepfm",
+        model="deepfm",
+        n_sparse=39,
+        n_dense=13,
+        embed_dim=10,
+        mlp=(400, 400, 400),
+        vocab_sizes=criteo_like_vocabs(39),
+        shapes=RECSYS_SHAPES,
+    )
+)

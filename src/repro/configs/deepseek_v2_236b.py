@@ -1,0 +1,34 @@
+"""deepseek-v2-236b [moe] — arXiv:2405.04434.
+
+60L d_model=5120 128H (GQA kv=128 → MLA) d_ff(expert)=1536 vocab=102400,
+MoE 160 routed experts top-6 + 2 shared; MLA kv_lora=512 (q_lora=1536 per
+the DeepSeek-V2 paper), qk_nope=128 qk_rope=64 v_head=128.
+"""
+
+from repro.configs.base import LMConfig, LM_SHAPES_FULL_ATTN, MoESpec, register
+
+CONFIG = register(
+    LMConfig(
+        arch_id="deepseek-v2-236b",
+        n_layers=60,
+        d_model=5120,
+        n_heads=128,
+        n_kv_heads=128,
+        d_head=128,
+        d_ff=1536,
+        vocab=102400,
+        attn="mla",
+        mla_kv_lora=512,
+        mla_q_lora=1536,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+        moe=MoESpec(n_experts=160, top_k=6, n_shared=2, d_ff_expert=1536),
+        dtype="bfloat16",
+        moment_dtype="bfloat16",
+        microbatches=8,
+        grad_accum_dtype="bfloat16",
+        grad_clip=0.0,  # no global-norm barrier at 236B (see LMConfig)  # 236B: fp32 moments don't fit 16G/chip
+        shapes=LM_SHAPES_FULL_ATTN,
+    )
+)

@@ -1,0 +1,20 @@
+"""fm [recsys] — Rendle, ICDM'10.
+
+Pure factorization machine: pairwise ⟨vᵢ,vⱼ⟩xᵢxⱼ via the O(nk) sum-square
+trick; 39 sparse fields, embed_dim 10.
+"""
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig, criteo_like_vocabs, register
+
+CONFIG = register(
+    RecsysConfig(
+        arch_id="fm",
+        model="fm",
+        n_sparse=39,
+        n_dense=13,
+        embed_dim=10,
+        mlp=(),
+        vocab_sizes=criteo_like_vocabs(39),
+        shapes=RECSYS_SHAPES,
+    )
+)

@@ -1,0 +1,28 @@
+"""gat-cora [gnn] — arXiv:1710.10903 (GAT).
+
+2 layers, 8 hidden units/head, 8 heads, attention aggregation.  The four
+assigned shape cells span full-batch small (Cora), sampled minibatch
+(Reddit-scale w/ 15-10 fanout), full-batch large (ogbn-products) and
+batched small molecule graphs.
+"""
+
+from repro.configs.base import GNNConfig, GNNShape, register
+
+CONFIG = register(
+    GNNConfig(
+        arch_id="gat-cora",
+        n_layers=2,
+        d_hidden=8,
+        n_heads=8,
+        aggregator="attn",
+        shapes=(
+            GNNShape("full_graph_sm", "full_graph", 2_708, 10_556, 1_433, n_classes=7),
+            GNNShape(
+                "minibatch_lg", "minibatch", 232_965, 114_615_892, 602,
+                n_classes=41, batch_nodes=1_024, fanout=(15, 10),
+            ),
+            GNNShape("ogb_products", "full_graph", 2_449_029, 61_859_140, 100, n_classes=47),
+            GNNShape("molecule", "batched_small", 30, 64, 16, n_classes=2, n_graphs=128),
+        ),
+    )
+)

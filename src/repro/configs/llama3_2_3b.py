@@ -1,0 +1,26 @@
+"""llama3.2-3b [dense] — hf:meta-llama (llama3 family).
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+24 heads / 8 kv heads do not divide 16-way TP → attention projections are
+FSDP-sharded only (DESIGN.md §5); d_ff and vocab take the TP dimension.
+"""
+
+from repro.configs.base import LMConfig, LM_SHAPES_FULL_ATTN, register
+
+CONFIG = register(
+    LMConfig(
+        arch_id="llama3.2-3b",
+        n_layers=28,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=8192,
+        vocab=128256,
+        attn="gqa",
+        rope_theta=500000.0,
+        dtype="bfloat16",
+        microbatches=4,
+        shapes=LM_SHAPES_FULL_ATTN,
+    )
+)

@@ -1,0 +1,25 @@
+"""moonshot-v1-16b-a3b [moe] — hf:moonshotai/Moonlight-16B-A3B.
+
+48L d_model=2048 16H (kv=16, MHA) d_ff(expert)=1408 vocab=163840,
+MoE 64 routed experts top-6 + 2 shared (DeepSeek-V3-style fine-grained).
+"""
+
+from repro.configs.base import LMConfig, LM_SHAPES_FULL_ATTN, MoESpec, register
+
+CONFIG = register(
+    LMConfig(
+        arch_id="moonshot-v1-16b-a3b",
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_head=128,
+        d_ff=1408,
+        vocab=163840,
+        attn="gqa",
+        moe=MoESpec(n_experts=64, top_k=6, n_shared=2, d_ff_expert=1408),
+        dtype="bfloat16",
+        microbatches=4,
+        shapes=LM_SHAPES_FULL_ATTN,
+    )
+)

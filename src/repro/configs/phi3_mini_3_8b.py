@@ -1,0 +1,23 @@
+"""phi3-mini-3.8b [dense] — arXiv:2404.14219.
+
+32L d_model=3072 32H (MHA, kv=32) d_ff=8192 vocab=32064.  RoPE + SwiGLU.
+"""
+
+from repro.configs.base import LMConfig, LM_SHAPES_FULL_ATTN, register
+
+CONFIG = register(
+    LMConfig(
+        arch_id="phi3-mini-3.8b",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=96,
+        d_ff=8192,
+        vocab=32064,
+        attn="gqa",
+        dtype="bfloat16",
+        microbatches=4,
+        shapes=LM_SHAPES_FULL_ATTN,
+    )
+)

@@ -1,0 +1,24 @@
+"""smollm-360m [dense] — hf:HuggingFaceTB/SmolLM family.
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152.  15/5 heads don't
+divide TP → attention FSDP-only; d_ff/vocab TP-sharded.
+"""
+
+from repro.configs.base import LMConfig, LM_SHAPES_FULL_ATTN, register
+
+CONFIG = register(
+    LMConfig(
+        arch_id="smollm-360m",
+        n_layers=32,
+        d_model=960,
+        n_heads=15,
+        n_kv_heads=5,
+        d_head=64,
+        d_ff=2560,
+        vocab=49152,
+        attn="gqa",
+        dtype="bfloat16",
+        microbatches=2,
+        shapes=LM_SHAPES_FULL_ATTN,
+    )
+)

@@ -1,0 +1,26 @@
+"""SOGAIC's own workload cells (the paper's pipeline stages at VDD10B scale).
+
+dim=512 (VDD10B), Φ=4096 centroids, Γ=1M, Ω=4, ε=1.8 (paper-tuned), R=64.
+Chunk sizes picked so per-device working sets fit a 16 GB v5e chip at the
+(2, 16, 16) production mesh (see EXPERIMENTS.md §Dry-run).
+"""
+
+from repro.configs.base import SogaicCellConfig, register
+
+CONFIG = register(
+    SogaicCellConfig(
+        arch_id="sogaic-vdd10b",
+        dim=512,
+        phi=4096,
+        gamma=1_048_576,
+        omega=4,
+        eps=1.8,
+        k_cand=32,
+        r=64,
+        knn_k=96,
+        pq_m=64,
+        chunk_b=1_048_576,
+        build_subset=65_536,
+        merge_nodes=2_097_152,
+    )
+)

@@ -1,0 +1,24 @@
+"""two-tower-retrieval [recsys] — RecSys'19 (YouTube) sampled-softmax.
+
+embed_dim 256, tower MLP 1024-512-256, dot-product interaction, in-batch
+sampled softmax.  ``retrieval_cand`` scores one query against 10⁶
+candidates (batched dot + top-k, candidates sharded over the model axis).
+This is the arch where SOGAIC applies directly: the candidate tower's
+embedding table is exactly what the paper's index construction serves.
+"""
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig, register
+
+CONFIG = register(
+    RecsysConfig(
+        arch_id="two-tower-retrieval",
+        model="two_tower",
+        n_sparse=8,  # user-side categorical features
+        n_dense=16,
+        embed_dim=256,
+        tower_mlp=(1024, 512, 256),
+        vocab_sizes=(5_000_000, 2_000_000, 500_000, 100_000, 50_000, 10_000, 1_000, 128),
+        n_items=5_000_000,
+        shapes=RECSYS_SHAPES,
+    )
+)

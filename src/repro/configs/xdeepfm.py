@@ -1,0 +1,20 @@
+"""xdeepfm [recsys] — arXiv:1803.05170.
+
+39 sparse fields, embed_dim 10, CIN layers 200-200-200, deep MLP 400-400.
+"""
+
+from repro.configs.base import RECSYS_SHAPES, RecsysConfig, criteo_like_vocabs, register
+
+CONFIG = register(
+    RecsysConfig(
+        arch_id="xdeepfm",
+        model="xdeepfm",
+        n_sparse=39,
+        n_dense=13,
+        embed_dim=10,
+        mlp=(400, 400),
+        cin_layers=(200, 200, 200),
+        vocab_sizes=criteo_like_vocabs(39),
+        shapes=RECSYS_SHAPES,
+    )
+)

@@ -1,0 +1,65 @@
+"""SOGAIC core — the paper's primary contribution as composable JAX modules.
+
+Layers (bottom-up):
+
+  kmeans      Φ-centroid seeding on a dataset sample (mini/full-batch Lloyd)
+  partition   Algorithm 1 — overload-aware adaptive vector assignment
+              (exact sequential oracle + chunk-synchronous batched JAX)
+  pq          product quantization (train / encode / ADC), fused into the
+              partitioning chunk pipeline exactly once per vector
+  graph       TPU-native subgraph construction: tiled exact kNN + RobustPrune
+              (+ optional Vamana-style beam refinement)
+  search      batched best-first beam search over a (sub)graph
+  merge       agglomerative pairwise subgraph merging + overlap-priority tree
+  scheduler   LPT load balancing, speculative re-execution, elastic workers
+  pipeline    checkpointed end-to-end build orchestration (SOGAICBuilder)
+"""
+
+from repro.core.kmeans import kmeans_fit, kmeans_plus_plus_init, pairwise_sq_l2
+from repro.core.partition import (
+    PartitionConfig,
+    assign_chunk,
+    assign_reference,
+    estimate_num_partitions,
+)
+from repro.core.pq import PQCodebook, adc_lookup_tables, pq_encode, pq_train
+from repro.core.graph import (
+    build_knn_graph,
+    build_subgraph,
+    find_medoid,
+    robust_prune,
+    vamana_refine,
+)
+from repro.core.search import beam_search, recall_at_k
+from repro.core.merge import SubGraph, agglomerative_schedule, merge_pair
+from repro.core.scheduler import ClusterScheduler, lpt_schedule
+from repro.core.pipeline import SOGAICBuilder, SOGAICConfig, SOGAICIndex
+
+__all__ = [
+    "kmeans_fit",
+    "kmeans_plus_plus_init",
+    "pairwise_sq_l2",
+    "PartitionConfig",
+    "assign_chunk",
+    "assign_reference",
+    "estimate_num_partitions",
+    "PQCodebook",
+    "pq_train",
+    "pq_encode",
+    "adc_lookup_tables",
+    "build_knn_graph",
+    "build_subgraph",
+    "robust_prune",
+    "find_medoid",
+    "vamana_refine",
+    "beam_search",
+    "recall_at_k",
+    "SubGraph",
+    "merge_pair",
+    "agglomerative_schedule",
+    "lpt_schedule",
+    "ClusterScheduler",
+    "SOGAICBuilder",
+    "SOGAICConfig",
+    "SOGAICIndex",
+]

@@ -1,0 +1,197 @@
+"""Mini-batch / full-batch Lloyd k-means in JAX.
+
+SOGAIC's partitioning stage (paper §2.1) runs K-means on a *small sample* of
+the dataset to obtain Φ centroids that seed the overload-aware assignment
+walk (Algorithm 1).  Everything here is expressed as MXU-friendly matmuls:
+the squared-L2 distance matrix is computed as ``|x|² − 2·x·cᵀ + |c|²`` so the
+hot loop is a single GEMM per Lloyd iteration.
+
+The module is self-contained and jit-safe; ``kmeans_fit`` is the public
+entry point.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "KMeansState",
+    "kmeans_fit",
+    "kmeans_plus_plus_init",
+    "pairwise_sq_l2",
+    "assign_nearest",
+]
+
+
+def pairwise_sq_l2(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared L2 distances between rows of ``x`` (n, d) and ``c`` (k, d).
+
+    Returned as (n, k), clamped at zero (the expansion can go slightly
+    negative in low precision).  The ``x @ c.T`` contraction dominates and
+    maps onto the MXU; on TPU the fused Pallas kernel in
+    :mod:`repro.kernels` implements the same contraction with explicit VMEM
+    tiling — this jnp form is its oracle and the CPU path.
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # (n, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]  # (1, k)
+    xc = jax.lax.dot_general(
+        x,
+        c,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.maximum(x2 - 2.0 * xc + c2, 0.0)
+
+
+def assign_nearest(x: jax.Array, centroids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment.  Returns (idx (n,), sq_dist (n,))."""
+    d = pairwise_sq_l2(x, centroids)
+    idx = jnp.argmin(d, axis=-1)
+    return idx, jnp.take_along_axis(d, idx[:, None], axis=-1)[:, 0]
+
+
+class KMeansState(NamedTuple):
+    centroids: jax.Array  # (k, d) float32
+    inertia: jax.Array  # () float32 — mean squared distance at last step
+    n_iter: jax.Array  # () int32
+
+
+def kmeans_plus_plus_init(
+    key: jax.Array, x: jax.Array, k: int, *, n_local_trials: int = 0
+) -> jax.Array:
+    """k-means++ seeding (Arthur & Vassilvitskii).
+
+    Sequential over ``k`` picks but each pick is a full-width distance
+    update, so the loop body is a GEMV-like broadcast — fine for the sample
+    sizes SOGAIC uses (Φ centroids from ≤ a few hundred thousand sampled
+    rows).
+    """
+    del n_local_trials  # greedy variant not needed at our sample sizes
+    n = x.shape[0]
+    x = x.astype(jnp.float32)
+
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    init_centroid = x[first]
+
+    def body(carry, step_key):
+        min_d2, centroids, j = carry
+        # Sample next centroid ∝ D², as in the paper.  log-space categorical.
+        logits = jnp.where(min_d2 > 0, jnp.log(min_d2 + 1e-30), -jnp.inf)
+        # Guard: if all distances are zero (duplicate-heavy sample) fall back
+        # to uniform so sampling stays well-defined.
+        logits = jnp.where(jnp.all(~jnp.isfinite(logits)), jnp.zeros_like(logits), logits)
+        nxt = jax.random.categorical(step_key, logits)
+        c_new = x[nxt]
+        d2_new = jnp.sum((x - c_new[None, :]) ** 2, axis=-1)
+        min_d2 = jnp.minimum(min_d2, d2_new)
+        centroids = centroids.at[j].set(c_new)
+        return (min_d2, centroids, j + 1), None
+
+    d2_init = jnp.sum((x - init_centroid[None, :]) ** 2, axis=-1)
+    centroids0 = jnp.zeros((k, x.shape[1]), jnp.float32).at[0].set(init_centroid)
+    (_, centroids, _), _ = jax.lax.scan(
+        body, (d2_init, centroids0, jnp.int32(1)), jax.random.split(key, k - 1)
+    )
+    return centroids
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "max_iters", "batch_size", "init")
+)
+def kmeans_fit(
+    key: jax.Array,
+    x: jax.Array,
+    k: int,
+    *,
+    max_iters: int = 25,
+    tol: float = 1e-4,
+    batch_size: int | None = None,
+    init: str = "kmeans++",
+) -> KMeansState:
+    """Fit k-means on ``x`` (n, d) with ``k`` clusters.
+
+    Full-batch Lloyd when ``batch_size is None``; mini-batch (Sculley 2010
+    style, with per-centroid learning-rate 1/count) otherwise.  Empty
+    clusters keep their previous centroid.
+
+    Early stopping on centroid movement < ``tol`` is implemented with a
+    ``while_loop`` so the compiled step count is data-dependent but bounded
+    by ``max_iters``.
+    """
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    if init == "kmeans++":
+        init_key, key = jax.random.split(key)
+        centroids = kmeans_plus_plus_init(init_key, x, k)
+    elif init == "random":
+        init_key, key = jax.random.split(key)
+        sel = jax.random.choice(init_key, n, (k,), replace=False)
+        centroids = x[sel]
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown init {init!r}")
+
+    def full_batch_step(centroids):
+        idx, d2 = assign_nearest(x, centroids)
+        sums = jax.ops.segment_sum(x, idx, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), idx, num_segments=k)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids)
+        return new, jnp.mean(d2)
+
+    def minibatch_step(centroids, counts, step_key):
+        sel = jax.random.randint(step_key, (batch_size,), 0, n)
+        xb = x[sel]
+        idx, d2 = assign_nearest(xb, centroids)
+        b_sums = jax.ops.segment_sum(xb, idx, num_segments=k)
+        b_counts = jax.ops.segment_sum(
+            jnp.ones((batch_size,), jnp.float32), idx, num_segments=k
+        )
+        counts = counts + b_counts
+        lr = jnp.where(counts > 0, b_counts / jnp.maximum(counts, 1.0), 0.0)
+        new = centroids + lr[:, None] * (
+            jnp.where(
+                b_counts[:, None] > 0,
+                b_sums / jnp.maximum(b_counts[:, None], 1.0),
+                centroids,
+            )
+            - centroids
+        )
+        return new, counts, jnp.mean(d2)
+
+    if batch_size is None:
+
+        def cond(state):
+            _, shift, i, _ = state
+            return jnp.logical_and(i < max_iters, shift > tol)
+
+        def body(state):
+            centroids, _, i, _ = state
+            new, inertia = full_batch_step(centroids)
+            shift = jnp.max(jnp.sum((new - centroids) ** 2, axis=-1))
+            return new, shift, i + 1, inertia
+
+        centroids, _, n_iter, inertia = jax.lax.while_loop(
+            cond, body, (centroids, jnp.float32(jnp.inf), jnp.int32(0), jnp.float32(0.0))
+        )
+    else:
+
+        def body(carry, step_key):
+            centroids, counts = carry
+            new, counts, inertia = minibatch_step(centroids, counts, step_key)
+            return (new, counts), inertia
+
+        (centroids, _), inertias = jax.lax.scan(
+            body,
+            (centroids, jnp.zeros((k,), jnp.float32)),
+            jax.random.split(key, max_iters),
+        )
+        inertia = inertias[-1]
+        n_iter = jnp.int32(max_iters)
+
+    return KMeansState(centroids=centroids, inertia=inertia, n_iter=n_iter)

@@ -1,0 +1,228 @@
+"""Agglomerative subgraph merging (paper §2.2, Fig. 2b).
+
+Completed subgraphs are merged pairwise up a binary tree — O(log n) merge
+depth instead of DiskANN's sequential single-machine O(n) on-disk merge.
+The computationally intensive part is neighbor re-selection in the overlap
+regions; disjoint adjacency carries over untouched.  Merging is in-memory
+with direct access to the vectors, so re-pruning uses exact distances
+("more precise pruning and selection" — the paper's quality argument).
+
+Host code orchestrates id bookkeeping (NumPy); all distance/prune compute
+is the jitted :func:`repro.core.graph.prune_candidate_lists`.
+
+Scheduling hooks: :func:`agglomerative_schedule` pairs subgraphs with the
+highest overlap first (the paper's "merges with higher overlap receive
+higher priority") and emits per-round task lists the cluster scheduler
+executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import prune_candidate_lists
+
+__all__ = ["SubGraph", "merge_pair", "overlap_counts", "agglomerative_schedule"]
+
+
+@dataclasses.dataclass
+class SubGraph:
+    """A subgraph over a subset of the global vector set.
+
+    ids  (n,)   int64 — sorted global vector ids of the members
+    adj  (n, R) int32 — local adjacency (indices into ``ids``), -1 padded
+    """
+
+    ids: np.ndarray
+    adj: np.ndarray
+
+    def __post_init__(self) -> None:
+        assert self.ids.ndim == 1 and self.adj.ndim == 2
+        assert self.adj.shape[0] == self.ids.shape[0]
+
+    @property
+    def n(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def r(self) -> int:
+        return int(self.adj.shape[1])
+
+    def to_global(self) -> np.ndarray:
+        """Adjacency in global ids (-1 padded)."""
+        out = np.where(self.adj >= 0, self.ids[np.maximum(self.adj, 0)], -1)
+        return out.astype(np.int64)
+
+
+def overlap_counts(members: list[np.ndarray]) -> np.ndarray:
+    """Pairwise |Sᵢ ∩ Sⱼ| for the subset member lists (sorted id arrays)."""
+    k = len(members)
+    out = np.zeros((k, k), np.int64)
+    for i in range(k):
+        for j in range(i + 1, k):
+            c = len(np.intersect1d(members[i], members[j], assume_unique=True))
+            out[i, j] = out[j, i] = c
+    return out
+
+
+def agglomerative_schedule(
+    sizes: np.ndarray, overlaps: np.ndarray
+) -> list[list[tuple[int, int]]]:
+    """Binary merge tree as greedy max-overlap matching per round.
+
+    Node labels: 0..k-1 are leaves; each merge (i, j) at global step t
+    creates node k+t.  Returns rounds of (i, j) pairs; a leftover odd node
+    carries into the next round.  Pairs within a round are ordered by
+    overlap descending (higher-overlap merges scheduled first).
+    """
+    k = len(sizes)
+    if k == 1:
+        return []
+    alive = list(range(k))
+    sizes = {i: int(sizes[i]) for i in range(k)}
+    ov = {}
+    for i in range(k):
+        for j in range(i + 1, k):
+            ov[(i, j)] = int(overlaps[i, j])
+
+    def get_ov(a, b):
+        return ov.get((min(a, b), max(a, b)), 0)
+
+    rounds: list[list[tuple[int, int]]] = []
+    next_id = k
+    while len(alive) > 1:
+        pairs = sorted(
+            [(a, b) for ai, a in enumerate(alive) for b in alive[ai + 1 :]],
+            key=lambda p: (-get_ov(*p), sizes[p[0]] + sizes[p[1]]),
+        )
+        used: set[int] = set()
+        round_pairs: list[tuple[int, int]] = []
+        new_nodes: list[int] = []
+        for a, b in pairs:
+            if a in used or b in used:
+                continue
+            used.update((a, b))
+            round_pairs.append((a, b))
+            # conservative size/overlap estimates for the merged node
+            sizes[next_id] = sizes[a] + sizes[b] - get_ov(a, b)
+            for c in alive:
+                if c not in (a, b):
+                    ov[(min(c, next_id), max(c, next_id))] = get_ov(a, c) + get_ov(b, c)
+            new_nodes.append(next_id)
+            next_id += 1
+        alive = [x for x in alive if x not in used] + new_nodes
+        rounds.append(round_pairs)
+    return rounds
+
+
+def merge_pair(
+    ga: SubGraph,
+    gb: SubGraph,
+    x_global,
+    *,
+    alpha: float = 1.2,
+    backlink: bool = True,
+) -> SubGraph:
+    """Merge two subgraphs into one over the union of their members.
+
+    - union ids; remap both adjacency tables into union-local indices
+    - nodes present in exactly one side: adjacency carried over unchanged
+    - overlap nodes: candidates = union of both neighbor lists → exact
+      distances → RobustPrune to R
+    - optional backlink stitch: overlap nodes are offered as candidates to
+      their selected neighbors (keeps the two halves mutually reachable
+      even where overlap is thin)
+
+    ``x_global``: (N, d) global vector store (np.ndarray or jax.Array);
+    rows are gathered for the union only.
+    """
+    r = max(ga.r, gb.r)
+    union = np.union1d(ga.ids, gb.ids)
+    pos_a = np.searchsorted(union, ga.ids)
+    pos_b = np.searchsorted(union, gb.ids)
+    m = len(union)
+
+    in_a = np.zeros(m, bool)
+    in_a[pos_a] = True
+    in_b = np.zeros(m, bool)
+    in_b[pos_b] = True
+    both = in_a & in_b
+
+    def remap(g: SubGraph, pos: np.ndarray) -> np.ndarray:
+        out = np.full((g.n, r), -1, np.int32)
+        valid = g.adj >= 0
+        out[:, : g.r][valid] = pos[g.adj[valid]].astype(np.int32)
+        return out
+
+    adj_a = remap(ga, pos_a)  # rows indexed like ga, values in union-local
+    adj_b = remap(gb, pos_b)
+
+    new_adj = np.full((m, r), -1, np.int32)
+    only_a = in_a & ~both
+    only_b = in_b & ~both
+    # carry-over rows (disjoint part, no recomputation — paper §2.2)
+    a_rows = {int(p): i for i, p in enumerate(pos_a)}
+    b_rows = {int(p): i for i, p in enumerate(pos_b)}
+    idx_only_a = np.nonzero(only_a)[0]
+    new_adj[idx_only_a] = adj_a[[a_rows[int(u)] for u in idx_only_a]]
+    idx_only_b = np.nonzero(only_b)[0]
+    new_adj[idx_only_b] = adj_b[[b_rows[int(u)] for u in idx_only_b]]
+
+    # overlap rows: candidate union → exact-distance RobustPrune
+    idx_both = np.nonzero(both)[0]
+    if len(idx_both):
+        cand = np.concatenate(
+            [
+                adj_a[[a_rows[int(u)] for u in idx_both]],
+                adj_b[[b_rows[int(u)] for u in idx_both]],
+            ],
+            axis=1,
+        )  # (o, 2R) union-local indices
+        xu = np.asarray(x_global)[union].astype(np.float32)  # gather union once
+        # bucket the vector table to a power of two so merge sizes share
+        # compiled prunes (pad rows are never indexed — all ids < m)
+        m_pad = 1 << (m - 1).bit_length()
+        if m_pad > m:
+            xu = np.concatenate([xu, np.zeros((m_pad - m, xu.shape[1]), np.float32)])
+        xu_dev = jnp.asarray(xu)
+        pruned = prune_candidate_lists(
+            xu_dev,
+            jnp.asarray(idx_both.astype(np.int32)),
+            jnp.asarray(cand.astype(np.int32)),
+            r,
+            alpha=alpha,
+            block=256,
+        )
+        new_adj[idx_both] = np.asarray(pruned)
+
+        if backlink:
+            # offer each overlap node as a candidate to its selected
+            # neighbors that live in the disjoint parts
+            sel = np.asarray(pruned)
+            src = np.repeat(idx_both, sel.shape[1])
+            dst = sel.reshape(-1)
+            ok = dst >= 0
+            src, dst = src[ok], dst[ok]
+            targets, inv = np.unique(dst, return_inverse=True)
+            cap = min(r, 16)
+            extra = np.full((len(targets), cap), -1, np.int32)
+            fill = np.zeros(len(targets), np.int32)
+            for s, t in zip(src, inv):
+                if fill[t] < cap:
+                    extra[t, fill[t]] = s
+                    fill[t] += 1
+            cand2 = np.concatenate([new_adj[targets], extra], axis=1)
+            pruned2 = prune_candidate_lists(
+                xu_dev,
+                jnp.asarray(targets.astype(np.int32)),
+                jnp.asarray(cand2.astype(np.int32)),
+                r,
+                alpha=alpha,
+                block=256,
+            )
+            new_adj[targets] = np.asarray(pruned2)
+
+    return SubGraph(ids=union.astype(np.int64), adj=new_adj)

@@ -1,0 +1,393 @@
+"""Algorithm 1 — Overload-Aware Adaptive Vector Assignment (paper §2.1).
+
+Two implementations:
+
+``assign_reference``
+    Exact, sequential NumPy transcription of the paper's pseudocode, with
+    globally-sequential capacity counters.  Used as the semantic oracle in
+    tests and for small builds.
+
+``assign_chunk``
+    Batched, jit-compiled JAX version used by the production pipeline.
+    Vectors are processed in chunks; capacity counters are snapshotted at
+    chunk entry and enforced *exactly* by an intra-chunk rank-by-distance
+    repair pass (closest requests win), with the counter state synchronised
+    between chunks (and, distributed, psum'd across the data axes).  The
+    paper itself parallelises assignment ("the vector assignment process is
+    independent"), so globally-sequential counters do not exist on their
+    cluster either; the invariants that matter — ``|s_i| ≤ Γ`` always, every
+    vector in ≥1 and ≤Ω subsets, acceptance follows the ε-relaxed
+    distance-ordered walk — hold bit-exactly.  See DESIGN.md §3.
+
+The chunk walk only inspects each vector's ``k_cand`` nearest centroids
+(the full Φ-wide walk almost never progresses past a handful of candidates;
+the tail only matters when *every* near centroid is full).  Vectors that
+exhaust their candidate list unassigned are returned to the host driver,
+which resolves them exactly against the full centroid set — a path that is
+cold by construction (Φ·Γ ≥ Ω·N guarantees spare capacity somewhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import pairwise_sq_l2
+
+__all__ = [
+    "PartitionConfig",
+    "AssignChunkResult",
+    "estimate_num_partitions",
+    "assign_reference",
+    "assign_chunk",
+    "partition_all",
+    "PartitionResult",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Parameters of the overload-aware partitioning stage.
+
+    Attributes mirror the paper's symbols:
+      gamma   Γ — max vectors per subset (container memory bound)
+      omega   Ω — max subsets a vector may join (≥ 2)
+      eps     ε — adaptive relaxation (> 1); small for uniform data, larger
+                  for structured data (paper uses 1.8 on their datasets)
+    """
+
+    gamma: int
+    omega: int = 4
+    eps: float = 1.8
+    k_cand: int = 32
+    chunk_size: int = 8192
+    n_repair: int = 2
+    sample_size: int = 65536
+    kmeans_iters: int = 25
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.omega < 2:
+            raise ValueError("Ω must be ≥ 2 (paper, Algorithm 1 requirements)")
+        if self.eps <= 1.0:
+            raise ValueError("ε must be > 1")
+        if self.gamma < 1:
+            raise ValueError("Γ must be ≥ 1")
+
+
+def estimate_num_partitions(n: int, gamma: int, omega: int) -> int:
+    """Φ = ⌈Ω·N/Γ⌉ — minimum partition count for worst-case imbalance."""
+    return max(1, math.ceil(omega * n / gamma))
+
+
+# ---------------------------------------------------------------------------
+# Exact sequential oracle (paper pseudocode, line-for-line)
+# ---------------------------------------------------------------------------
+
+
+def assign_reference(
+    x: np.ndarray,
+    centroids: np.ndarray,
+    *,
+    omega: int,
+    eps: float,
+    gamma: int,
+    order: np.ndarray | None = None,
+) -> tuple[list[list[int]], np.ndarray]:
+    """Sequential Algorithm 1.  Returns (per-vector subset lists, sizes)."""
+    n = x.shape[0]
+    phi = centroids.shape[0]
+    sizes = np.zeros(phi, dtype=np.int64)
+    assignments: list[list[int]] = [[] for _ in range(n)]
+    idx_order = np.arange(n) if order is None else np.asarray(order)
+    for v in idx_order:
+        d = np.sqrt(np.maximum(((x[v][None, :] - centroids) ** 2).sum(-1), 0.0))
+        queue = np.argsort(d, kind="stable")
+        olp_cnt = 0
+        olp_factor = 0
+        acc_dist = 0.0
+        cur_avg = np.inf
+        for i in queue:  # 'while Q not empty and curOLPCnt < Ω'
+            if olp_cnt >= omega:
+                break
+            di = float(d[i])
+            if di <= eps * cur_avg:  # line 9 (inf on first iteration)
+                olp_factor += 1  # line 10
+                acc_dist += di  # line 11
+                cur_avg = acc_dist / olp_factor  # line 12
+                if sizes[i] < gamma:  # line 13
+                    olp_cnt += 1  # line 14
+                    sizes[i] += 1
+                    assignments[v].append(int(i))  # line 15
+                else:
+                    cur_avg = np.inf  # line 17 — reset on overload
+        assert assignments[v], "Φ·Γ ≥ Ω·N guarantees at least one landing spot"
+    return assignments, sizes
+
+
+# ---------------------------------------------------------------------------
+# Batched JAX implementation
+# ---------------------------------------------------------------------------
+
+
+class AssignChunkResult(NamedTuple):
+    accept: jax.Array  # (B, K) bool — final accepted (vector, candidate) slots
+    cand_idx: jax.Array  # (B, K) int32 — centroid id per slot
+    cand_dist: jax.Array  # (B, K) float32 — L2 distance per slot
+    added: jax.Array  # (Φ,) int32 — per-centroid additions from this chunk
+    unassigned: jax.Array  # (B,) bool — vectors needing host fallback
+    overlap: jax.Array  # (B,) int32 — accepted subset count per vector
+
+
+def _walk(dists: jax.Array, full: jax.Array, omega: int, eps) -> jax.Array:
+    """The ε-relaxed distance walk for one vector (scan over K candidates).
+
+    ``dists`` (K,) ascending; ``full`` (K,) bool — candidate's subset full at
+    snapshot.  Returns accept mask (K,).  Mirrors pseudocode lines 7-19.
+    """
+
+    def body(carry, inp):
+        olp_cnt, olp_factor, acc_dist, cur_avg = carry
+        d, is_full = inp
+        active = olp_cnt < omega  # while-loop condition (line 7)
+        dist_ok = d <= eps * cur_avg  # line 9
+        consider = active & dist_ok
+        olp_factor = jnp.where(consider, olp_factor + 1, olp_factor)
+        acc_dist = jnp.where(consider, acc_dist + d, acc_dist)
+        cur_avg = jnp.where(consider, acc_dist / jnp.maximum(olp_factor, 1), cur_avg)
+        take = consider & ~is_full  # line 13
+        olp_cnt = jnp.where(take, olp_cnt + 1, olp_cnt)
+        cur_avg = jnp.where(consider & is_full, jnp.inf, cur_avg)  # line 17
+        return (olp_cnt, olp_factor, acc_dist, cur_avg), take
+
+    # Derive the init carry from the inputs so it inherits their varying
+    # manual axes under shard_map (plain constants would fail the vma check).
+    zf = dists[0] * 0.0
+    zi = zf.astype(jnp.int32)
+    init = (zi, zi, zf, zf + jnp.inf)
+    _, take = jax.lax.scan(body, init, (dists, full))
+    return take
+
+
+def _enforce_capacity(
+    accept: jax.Array,
+    cand_idx: jax.Array,
+    cand_dist: jax.Array,
+    remaining: jax.Array,
+    phi: int,
+) -> jax.Array:
+    """Keep, per centroid, only the ``remaining[c]`` closest accepted requests.
+
+    Rank-by-distance within each centroid group via a two-key stable sort
+    (distance, then centroid) + segment-relative positions; O(BK log BK),
+    no (B, Φ) densification.
+    """
+    bk = accept.size
+    flat_accept = accept.reshape(-1)
+    flat_cid = cand_idx.reshape(-1)
+    flat_dist = cand_dist.reshape(-1)
+
+    # Stable sort by distance; rejected entries pushed to the end.
+    key1 = jnp.where(flat_accept, flat_dist, jnp.inf)
+    order1 = jnp.argsort(key1, stable=True)
+    cid1 = jnp.where(flat_accept, flat_cid, phi)[order1]  # sentinel Φ = invalid
+    # Stable sort by centroid id → groups contiguous, distance-ordered inside.
+    order2 = jnp.argsort(cid1, stable=True)
+    cid2 = cid1[order2]
+
+    pos = jnp.arange(bk, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), cid2[1:] != cid2[:-1]])
+    group_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    rank = pos - group_start
+    rem = remaining[jnp.minimum(cid2, phi - 1)]
+    keep_sorted = (cid2 < phi) & (rank < rem)
+
+    final_slot = order1[order2]  # position in original flat layout
+    keep_flat = jnp.zeros((bk,), bool).at[final_slot].set(keep_sorted)
+    return keep_flat.reshape(accept.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("omega", "gamma", "k_cand", "n_repair")
+)
+def assign_chunk(
+    x: jax.Array,
+    centroids: jax.Array,
+    sizes: jax.Array,
+    valid: jax.Array | None = None,
+    *,
+    omega: int,
+    eps: float,
+    gamma: int,
+    k_cand: int = 32,
+    n_repair: int = 2,
+) -> AssignChunkResult:
+    """Chunk-synchronous Algorithm 1 over a chunk of ``B`` vectors.
+
+    ``sizes`` (Φ,) int32 — subset sizes at chunk entry.  Capacity Γ is
+    enforced exactly: the walk runs against the snapshot, then the repair
+    pass keeps only the closest requests per centroid within the remaining
+    budget, then up to ``n_repair`` re-walks rescue vectors that lost all
+    their slots (with the updated counts).  Anything still unassigned is
+    flagged for the host's exact fallback.  ``valid`` masks padding rows in
+    the final (ragged) chunk so they neither claim capacity nor report as
+    unassigned.
+    """
+    phi = centroids.shape[0]
+    k_cand = min(k_cand, phi)
+    if valid is None:
+        valid = jnp.ones((x.shape[0],), bool)
+    d2 = pairwise_sq_l2(x, centroids)  # (B, Φ) — Pallas fused on TPU
+    neg_top, cand_idx = jax.lax.top_k(-d2, k_cand)
+    cand_idx = cand_idx.astype(jnp.int32)
+    cand_dist = jnp.sqrt(jnp.maximum(-neg_top, 0.0))  # ascending L2
+
+    accept = jnp.zeros(cand_dist.shape, bool)
+    added = jnp.zeros((phi,), jnp.int32)
+    need = valid  # vectors still fully unassigned
+
+    for _ in range(1 + n_repair):
+        sizes_eff = sizes + added
+        full = sizes_eff[cand_idx] >= gamma  # (B, K) snapshot
+        want = jax.vmap(_walk, in_axes=(0, 0, None, None))(
+            cand_dist, full, omega, jnp.float32(eps)
+        )
+        want = want & need[:, None]
+        remaining = jnp.maximum(gamma - sizes_eff, 0).astype(jnp.int32)
+        kept = _enforce_capacity(want, cand_idx, cand_dist, remaining, phi)
+        accept = accept | kept
+        added = added + jax.ops.segment_sum(
+            kept.reshape(-1).astype(jnp.int32),
+            cand_idx.reshape(-1),
+            num_segments=phi,
+        )
+        need = valid & ~jnp.any(accept, axis=1)
+
+    overlap = jnp.sum(accept, axis=1).astype(jnp.int32)
+    return AssignChunkResult(
+        accept=accept,
+        cand_idx=cand_idx,
+        cand_dist=cand_dist,
+        added=added,
+        unassigned=need & valid,
+        overlap=overlap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host driver — streams chunks, resolves rare fallbacks exactly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    """Output of the partitioning stage.
+
+    ``assign_idx`` (N, Ω) int32 — centroid ids per vector, -1 padded.
+    ``sizes`` (Φ,) int64 — final subset sizes (all ≤ Γ).
+    ``avg_overlap`` — the paper's §3.2.1 metric (their 1.93 @ Ω=4, ε=1.8).
+    ``fallback_count`` — vectors resolved by the host's exact cold path.
+    """
+
+    assign_idx: np.ndarray
+    sizes: np.ndarray
+    avg_overlap: float
+    fallback_count: int
+
+    def members(self, subset: int) -> np.ndarray:
+        return np.nonzero((self.assign_idx == subset).any(axis=1))[0]
+
+    def all_members(self) -> list[np.ndarray]:
+        phi = len(self.sizes)
+        flat = self.assign_idx.reshape(-1)
+        vec = np.repeat(np.arange(self.assign_idx.shape[0]), self.assign_idx.shape[1])
+        valid = flat >= 0
+        order = np.argsort(flat[valid], kind="stable")
+        svals = flat[valid][order]
+        svecs = vec[valid][order]
+        bounds = np.searchsorted(svals, np.arange(phi + 1))
+        return [svecs[bounds[i] : bounds[i + 1]] for i in range(phi)]
+
+
+def _host_fallback(
+    xi: np.ndarray, centroids: np.ndarray, sizes: np.ndarray, gamma: int
+) -> int:
+    """Exact nearest non-full centroid for one vector (cold path)."""
+    d = ((xi[None, :] - centroids) ** 2).sum(-1)
+    d[sizes >= gamma] = np.inf
+    j = int(np.argmin(d))
+    if not np.isfinite(d[j]):  # pragma: no cover — impossible if Φ·Γ ≥ N
+        raise RuntimeError("all subsets full; Γ/Ω misconfigured")
+    return j
+
+
+def partition_all(
+    x: np.ndarray,
+    centroids: np.ndarray,
+    cfg: PartitionConfig,
+    *,
+    progress: bool = False,
+) -> PartitionResult:
+    """Stream ``x`` through ``assign_chunk`` and assemble the full result."""
+    n = x.shape[0]
+    phi = centroids.shape[0]
+    omega = cfg.omega
+    sizes = np.zeros((phi,), np.int32)
+    assign_idx = np.full((n, omega), -1, np.int32)
+    fallbacks = 0
+    centroids_j = jnp.asarray(centroids, jnp.float32)
+
+    for lo in range(0, n, cfg.chunk_size):
+        hi = min(lo + cfg.chunk_size, n)
+        xc = x[lo:hi]
+        pad = 0
+        if hi - lo < cfg.chunk_size and n > cfg.chunk_size:
+            pad = cfg.chunk_size - (hi - lo)
+            xc = np.concatenate([xc, np.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+        valid = np.ones((xc.shape[0],), bool)
+        if pad:
+            valid[hi - lo :] = False
+        res = assign_chunk(
+            jnp.asarray(xc, jnp.float32),
+            centroids_j,
+            jnp.asarray(sizes),
+            jnp.asarray(valid),
+            omega=omega,
+            eps=cfg.eps,
+            gamma=cfg.gamma,
+            k_cand=cfg.k_cand,
+            n_repair=cfg.n_repair,
+        )
+        accept = np.asarray(res.accept)
+        cand = np.asarray(res.cand_idx)
+        unassigned = np.asarray(res.unassigned)
+        if pad:
+            accept, cand, unassigned = accept[: hi - lo], cand[: hi - lo], unassigned[: hi - lo]
+        # Scatter accepted assignments into the (N, Ω) table.
+        for b in range(hi - lo):
+            row = cand[b][accept[b]][:omega]
+            assign_idx[lo + b, : len(row)] = row
+            sizes[row] += 1
+            if unassigned[b]:
+                j = _host_fallback(x[lo + b].astype(np.float64), centroids, sizes, cfg.gamma)
+                assign_idx[lo + b, 0] = j
+                sizes[j] += 1
+                fallbacks += 1
+        if progress:  # pragma: no cover
+            print(f"partition: {hi}/{n} sizes max={sizes.max()} fallbacks={fallbacks}")
+
+    assert sizes.max() <= cfg.gamma, "capacity invariant violated"
+    valid = (assign_idx >= 0).sum(axis=1)
+    assert (valid >= 1).all(), "every vector must land in ≥1 subset"
+    return PartitionResult(
+        assign_idx=assign_idx,
+        sizes=sizes.astype(np.int64),
+        avg_overlap=float(valid.mean()),
+        fallback_count=fallbacks,
+    )

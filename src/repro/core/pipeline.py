@@ -1,0 +1,574 @@
+"""End-to-end SOGAIC build pipeline (paper §2, Fig. 1c + Fig. 2).
+
+Stages (each checkpointed, each resumable):
+
+  1. ``centroids``   sample → K-means → Φ = ⌈Ω·N/Γ⌉ centroids
+  2. ``partition``   stream chunks through Algorithm 1 (+ fused PQ encode —
+                     each vector encoded exactly once, in the same
+                     device-resident pass, per Fig. 1c)
+  3. ``build``       per-subset subgraph construction, LPT-scheduled across
+                     the worker pool (ClusterScheduler: retries, speculation,
+                     elasticity)
+  4. ``merge``       agglomerative binary-tree merge, highest-overlap pairs
+                     first, scheduled per round
+  5. ``finalize``    medoid + final graph assembly → SOGAICIndex
+
+The pipeline is host-orchestrated; every hot loop (distances, walks, prunes,
+searches) is a jitted JAX function, which is exactly how the distributed
+deployment maps it onto pods (repro.distributed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import partition as partition_mod
+from repro.core.graph import build_subgraph, find_medoid, graph_stats
+from repro.core.kmeans import kmeans_fit
+from repro.core.merge import SubGraph, agglomerative_schedule, merge_pair, overlap_counts
+from repro.core.partition import (
+    PartitionConfig,
+    assign_chunk,
+    estimate_num_partitions,
+)
+from repro.core.pq import PQCodebook, pq_encode, pq_train
+from repro.core.scheduler import (
+    ClusterScheduler,
+    ScheduledTask,
+    fit_linear_cost,
+    predict_build_cost,
+)
+from repro.core.search import beam_search
+
+__all__ = ["SOGAICConfig", "SOGAICBuilder", "SOGAICIndex", "BuildReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SOGAICConfig:
+    """Full build configuration (partitioning ∪ graph ∪ cluster)."""
+
+    # -- partitioning (paper symbols) --
+    gamma: int = 4096  # Γ: max vectors per subset
+    omega: int = 4  # Ω: max subsets per vector
+    eps: float = 1.8  # ε: adaptive relaxation (paper's tuned value)
+    k_cand: int = 32
+    chunk_size: int = 8192
+    n_repair: int = 2
+    sample_size: int = 65536
+    kmeans_iters: int = 25
+    # -- graph --
+    r: int = 32  # degree bound
+    alpha: float = 1.2  # RobustPrune diversification
+    knn_k: int | None = None
+    rev_cap: int | None = None
+    refine_rounds: int = 0  # Vamana-style beam re-search passes on the final graph
+    # -- quantization --
+    pq_m: int = 0  # 0 disables PQ
+    pq_codes: int = 256
+    pq_iters: int = 15
+    # -- cluster --
+    n_workers: int = 4
+    straggler_factor: float = 3.0
+    max_attempts: int = 4
+    # -- misc --
+    seed: int = 0
+    ckpt_every_chunks: int = 16
+
+    def partition_config(self) -> PartitionConfig:
+        return PartitionConfig(
+            gamma=self.gamma,
+            omega=self.omega,
+            eps=self.eps,
+            k_cand=self.k_cand,
+            chunk_size=self.chunk_size,
+            n_repair=self.n_repair,
+            sample_size=self.sample_size,
+            kmeans_iters=self.kmeans_iters,
+            seed=self.seed,
+        )
+
+
+@dataclasses.dataclass
+class BuildReport:
+    n: int = 0
+    dim: int = 0
+    phi: int = 0
+    timings: dict = dataclasses.field(default_factory=dict)
+    avg_overlap: float = 0.0
+    fallback_count: int = 0
+    build_makespan: float = 0.0
+    merge_makespan: float = 0.0
+    scheduler_events: int = 0
+    graph: dict = dataclasses.field(default_factory=dict)
+    cost_model: tuple[float, float] = (0.0, 1.0)
+
+    def total_parallel_time(self) -> float:
+        """Virtual wall time of the distributed phases plus host stages."""
+        return (
+            self.timings.get("centroids", 0.0)
+            + self.timings.get("partition", 0.0)
+            + self.build_makespan
+            + self.merge_makespan
+        )
+
+
+class SOGAICIndex:
+    """A built index: vectors + pruned graph + entry points (+ optional PQ).
+
+    Search uses **centroid-routed entries**: each query enters the graph at
+    the member nearest to its closest partition centroid (the centroids are
+    a free by-product of the build).  A single medoid entry fails on
+    cluster-structured data — greedy descent cannot escape a dense mega-
+    cluster — while the graph itself is locally near-perfect; routing fixes
+    exactly that (EXPERIMENTS.md §Paper-reproduction, isd3b row).
+    """
+
+    def __init__(
+        self,
+        x: np.ndarray,
+        adj: np.ndarray,
+        medoid: int,
+        *,
+        centroids: np.ndarray | None = None,
+        entry_points: np.ndarray | None = None,
+        pq_codebook: PQCodebook | None = None,
+        pq_codes: np.ndarray | None = None,
+    ) -> None:
+        self.x = np.asarray(x)
+        self.adj = np.asarray(adj)
+        self.medoid = int(medoid)
+        self.centroids = None if centroids is None else np.asarray(centroids)
+        self.entry_points = None if entry_points is None else np.asarray(entry_points)
+        self.pq_codebook = pq_codebook
+        self.pq_codes = pq_codes
+        self._x_dev = jnp.asarray(self.x, jnp.float32)
+        self._adj_dev = jnp.asarray(self.adj)
+
+    def _entries(self, queries: jax.Array):
+        if self.centroids is None or self.entry_points is None:
+            return jnp.int32(self.medoid)
+        from repro.core.kmeans import pairwise_sq_l2
+
+        d2 = pairwise_sq_l2(queries, jnp.asarray(self.centroids, jnp.float32))
+        cid = jnp.argmin(d2, axis=1)
+        return jnp.asarray(self.entry_points, jnp.int32)[cid]
+
+    def search(
+        self, queries: np.ndarray, k: int = 10, *, beam_l: int = 64, max_hops: int = 96
+    ) -> tuple[np.ndarray, np.ndarray]:
+        q = jnp.asarray(queries, jnp.float32)
+        res = beam_search(
+            self._x_dev,
+            self._adj_dev,
+            q,
+            self._entries(q),
+            k=k,
+            beam_l=beam_l,
+            max_hops=max_hops,
+        )
+        return np.asarray(res.ids), np.asarray(res.dists)
+
+    def save(self, ckpt: CheckpointManager) -> None:
+        arrays = {"x": self.x, "adj": self.adj, "medoid": np.int64(self.medoid)}
+        if self.centroids is not None:
+            arrays["centroids"] = self.centroids
+            arrays["entry_points"] = self.entry_points
+        if self.pq_codes is not None:
+            arrays["pq_codes"] = self.pq_codes
+            arrays["pq_codebooks"] = np.asarray(self.pq_codebook.codebooks)
+        ckpt.save_arrays("index", **arrays)
+        ckpt.mark_stage("index_saved")
+
+    @classmethod
+    def load(cls, ckpt: CheckpointManager) -> "SOGAICIndex":
+        z = ckpt.load_arrays("index")
+        pq_cb = (
+            PQCodebook(codebooks=jnp.asarray(z["pq_codebooks"]))
+            if "pq_codebooks" in z
+            else None
+        )
+        return cls(
+            z["x"],
+            z["adj"],
+            int(z["medoid"]),
+            centroids=z.get("centroids"),
+            entry_points=z.get("entry_points"),
+            pq_codebook=pq_cb,
+            pq_codes=z.get("pq_codes"),
+        )
+
+
+class SOGAICBuilder:
+    """Checkpointed, fault-tolerant SOGAIC build."""
+
+    def __init__(self, cfg: SOGAICConfig) -> None:
+        self.cfg = cfg
+
+    # -- stage 1 ------------------------------------------------------------
+    def _stage_centroids(
+        self, x: np.ndarray, phi: int, ckpt: CheckpointManager | None
+    ) -> np.ndarray:
+        if ckpt is not None and ckpt.stage_done("centroids"):
+            return ckpt.load_array("centroids")
+        key = jax.random.PRNGKey(self.cfg.seed)
+        n = x.shape[0]
+        sample_n = min(self.cfg.sample_size, n)
+        skey, kkey = jax.random.split(key)
+        sel = np.asarray(jax.random.choice(skey, n, (sample_n,), replace=False))
+        sample = jnp.asarray(x[np.sort(sel)], jnp.float32)
+        state = kmeans_fit(kkey, sample, phi, max_iters=self.cfg.kmeans_iters)
+        centroids = np.asarray(state.centroids)
+        if ckpt is not None:
+            ckpt.save_array("centroids", centroids)
+            ckpt.mark_stage("centroids", inertia=float(state.inertia))
+        return centroids
+
+    # -- stage 2 ------------------------------------------------------------
+    def _stage_partition(
+        self,
+        x: np.ndarray,
+        centroids: np.ndarray,
+        codebook: PQCodebook | None,
+        ckpt: CheckpointManager | None,
+        progress: bool,
+    ) -> tuple[partition_mod.PartitionResult, np.ndarray | None]:
+        cfg = self.cfg
+        n, d = x.shape
+        phi = centroids.shape[0]
+        start_chunk = 0
+        sizes = np.zeros((phi,), np.int32)
+        assign_idx = np.full((n, cfg.omega), -1, np.int32)
+        codes = np.zeros((n, cfg.pq_m), np.uint8) if codebook is not None else None
+        fallbacks = 0
+
+        if ckpt is not None and ckpt.exists("partition_state"):
+            st = ckpt.load_arrays("partition_state")
+            start_chunk = int(st["next_chunk"])
+            sizes = st["sizes"].astype(np.int32)
+            assign_idx = st["assign_idx"]
+            fallbacks = int(st["fallbacks"])
+            if codes is not None and "codes" in st:
+                codes = st["codes"]
+
+        centroids_j = jnp.asarray(centroids, jnp.float32)
+        n_chunks = -(-n // cfg.chunk_size)
+        for ci in range(start_chunk, n_chunks):
+            lo = ci * cfg.chunk_size
+            hi = min(lo + cfg.chunk_size, n)
+            xc = x[lo:hi]
+            pad = 0
+            if hi - lo < cfg.chunk_size and n > cfg.chunk_size:
+                pad = cfg.chunk_size - (hi - lo)
+                xc = np.concatenate([xc, np.zeros((pad, d), x.dtype)], axis=0)
+            valid = np.ones((xc.shape[0],), bool)
+            if pad:
+                valid[hi - lo :] = False
+            xc_dev = jnp.asarray(xc, jnp.float32)
+            res = assign_chunk(
+                xc_dev,
+                centroids_j,
+                jnp.asarray(sizes),
+                jnp.asarray(valid),
+                omega=cfg.omega,
+                eps=cfg.eps,
+                gamma=cfg.gamma,
+                k_cand=cfg.k_cand,
+                n_repair=cfg.n_repair,
+            )
+            # Fused PQ encode on the same device-resident chunk (Fig. 1c):
+            if codebook is not None:
+                chunk_codes = np.asarray(pq_encode(xc_dev, codebook))
+                codes[lo:hi] = chunk_codes[: hi - lo]
+            accept = np.asarray(res.accept)[: hi - lo]
+            cand = np.asarray(res.cand_idx)[: hi - lo]
+            unassigned = np.asarray(res.unassigned)[: hi - lo]
+            for b in range(hi - lo):
+                row = cand[b][accept[b]][: cfg.omega]
+                assign_idx[lo + b, : len(row)] = row
+                sizes[row] += 1
+                if unassigned[b]:
+                    j = partition_mod._host_fallback(
+                        x[lo + b].astype(np.float64), centroids, sizes, cfg.gamma
+                    )
+                    assign_idx[lo + b, 0] = j
+                    sizes[j] += 1
+                    fallbacks += 1
+            if ckpt is not None and (ci + 1) % cfg.ckpt_every_chunks == 0:
+                state = dict(
+                    next_chunk=np.int64(ci + 1),
+                    sizes=sizes,
+                    assign_idx=assign_idx,
+                    fallbacks=np.int64(fallbacks),
+                )
+                if codes is not None:
+                    state["codes"] = codes
+                ckpt.save_arrays("partition_state", **state)
+            if progress:  # pragma: no cover
+                print(f"partition chunk {ci + 1}/{n_chunks} max_size={sizes.max()}")
+
+        valid_cnt = (assign_idx >= 0).sum(axis=1)
+        result = partition_mod.PartitionResult(
+            assign_idx=assign_idx,
+            sizes=sizes.astype(np.int64),
+            avg_overlap=float(valid_cnt.mean()),
+            fallback_count=fallbacks,
+        )
+        if ckpt is not None:
+            ckpt.save_arrays(
+                "partition_result", assign_idx=assign_idx, sizes=result.sizes
+            )
+            ckpt.mark_stage(
+                "partition",
+                avg_overlap=result.avg_overlap,
+                fallbacks=fallbacks,
+            )
+            if codes is not None:
+                ckpt.save_array("pq_codes", codes)
+        return result, codes
+
+    # -- stage 3 ------------------------------------------------------------
+    def _stage_build(
+        self,
+        x: np.ndarray,
+        members: list[np.ndarray],
+        ckpt: CheckpointManager | None,
+        runner: Callable | None,
+        runner_wrapper: Callable | None = None,
+    ) -> tuple[dict[int, SubGraph], dict]:
+        cfg = self.cfg
+        d = x.shape[1]
+        subgraphs: dict[int, SubGraph] = {}
+        done: set[int] = set()
+        if ckpt is not None:
+            for i in range(len(members)):
+                if ckpt.exists(f"subgraph_{i}"):
+                    z = ckpt.load_arrays(f"subgraph_{i}")
+                    subgraphs[i] = SubGraph(ids=z["ids"], adj=z["adj"])
+                    done.add(i)
+
+        measured_sizes: list[int] = []
+        measured_times: list[float] = []
+
+        def default_runner(task: ScheduledTask, worker_id: int) -> float:
+            ids = task.payload
+            t0 = time.perf_counter()
+            sub_x = x[ids].astype(np.float32)
+            n_real = sub_x.shape[0]
+            # Bucket to the next power of two so distinct subset sizes reuse
+            # one compiled build (pads live at a far-away sentinel and are
+            # masked out of the graph via n_valid).
+            n_pad = max(64, 1 << (n_real - 1).bit_length())
+            if n_pad > n_real:
+                sentinel = float(np.abs(sub_x).max()) * 4.0 + 1e4
+                pads = np.full((n_pad - n_real, sub_x.shape[1]), sentinel, np.float32)
+                pads += np.arange(n_pad - n_real, dtype=np.float32)[:, None]
+                sub_x = np.concatenate([sub_x, pads], axis=0)
+            adj = build_subgraph(
+                jnp.asarray(sub_x),
+                cfg.r,
+                alpha=cfg.alpha,
+                knn_k=cfg.knn_k,
+                rev_cap=cfg.rev_cap,
+                n_valid=n_real,
+            )
+            adj.block_until_ready()
+            dt = time.perf_counter() - t0
+            sg = SubGraph(ids=ids.astype(np.int64), adj=np.asarray(adj)[:n_real])
+            subgraphs[task.task_id] = sg
+            if ckpt is not None:
+                ckpt.save_arrays(f"subgraph_{task.task_id}", ids=sg.ids, adj=sg.adj)
+            measured_sizes.append(len(ids))
+            measured_times.append(dt)
+            return dt
+
+        run = runner or default_runner
+        if runner_wrapper is not None:
+            run = runner_wrapper(run)
+        tasks = [
+            ScheduledTask(
+                task_id=i,
+                cost=predict_build_cost(len(members[i]), d),
+                payload=members[i],
+            )
+            for i in range(len(members))
+            if i not in done
+        ]
+        sched = ClusterScheduler(
+            cfg.n_workers,
+            straggler_factor=cfg.straggler_factor,
+            max_attempts=cfg.max_attempts,
+        )
+        stats = sched.run(tasks, run) if tasks else {"makespan": 0.0, "events": []}
+        if measured_sizes:
+            stats["cost_model"] = fit_linear_cost(
+                np.array(measured_sizes), np.array(measured_times)
+            )
+        if ckpt is not None:
+            ckpt.mark_stage("build", makespan=stats["makespan"])
+        return subgraphs, stats
+
+    # -- stage 4 ------------------------------------------------------------
+    def _stage_merge(
+        self,
+        x: np.ndarray,
+        subgraphs: dict[int, SubGraph],
+        members: list[np.ndarray],
+        ckpt: CheckpointManager | None,
+    ) -> tuple[SubGraph, dict]:
+        cfg = self.cfg
+        k = len(members)
+        if k == 1:
+            return subgraphs[0], {"makespan": 0.0, "rounds": 0}
+        sizes = np.array([len(m) for m in members])
+        ov = overlap_counts(members)
+        rounds = agglomerative_schedule(sizes, ov)
+
+        graphs: dict[int, SubGraph] = dict(subgraphs)
+        next_id = k
+        total_makespan = 0.0
+        for rnd_i, rnd in enumerate(rounds):
+            pair_ids = list(range(next_id, next_id + len(rnd)))
+            if ckpt is not None and all(
+                ckpt.exists(f"merged_{mid}") for mid in pair_ids
+            ):
+                for mid in pair_ids:
+                    z = ckpt.load_arrays(f"merged_{mid}")
+                    graphs[mid] = SubGraph(ids=z["ids"], adj=z["adj"])
+                next_id += len(rnd)
+                continue
+
+            def merge_runner(task: ScheduledTask, worker_id: int) -> float:
+                a, b, mid = task.payload
+                t0 = time.perf_counter()
+                g = merge_pair(graphs[a], graphs[b], x, alpha=cfg.alpha)
+                graphs[mid] = g
+                if ckpt is not None:
+                    ckpt.save_arrays(f"merged_{mid}", ids=g.ids, adj=g.adj)
+                return time.perf_counter() - t0
+
+            tasks = []
+            for (a, b), mid in zip(rnd, pair_ids):
+                est = graphs[a].n + graphs[b].n
+                prio = len(np.intersect1d(graphs[a].ids, graphs[b].ids))
+                tasks.append(
+                    ScheduledTask(
+                        task_id=mid, cost=float(est), priority=float(prio), payload=(a, b, mid)
+                    )
+                )
+            sched = ClusterScheduler(cfg.n_workers, max_attempts=cfg.max_attempts)
+            st = sched.run(tasks, merge_runner)
+            total_makespan += st["makespan"]
+            next_id += len(rnd)
+            if ckpt is not None:
+                ckpt.mark_stage(f"merge_round_{rnd_i}")
+
+        final = graphs[next_id - 1]
+        if ckpt is not None:
+            ckpt.mark_stage("merge", makespan=total_makespan)
+        return final, {"makespan": total_makespan, "rounds": len(rounds)}
+
+    # -- driver ---------------------------------------------------------------
+    def build(
+        self,
+        x: np.ndarray,
+        *,
+        ckpt: CheckpointManager | None = None,
+        runner: Callable | None = None,
+        runner_wrapper: Callable | None = None,
+        progress: bool = False,
+    ) -> tuple[SOGAICIndex, BuildReport]:
+        """Build the index.  ``runner_wrapper`` (e.g.
+        ``SimulatedCluster.wrap``) wraps the default build runner with
+        failure/straggler injection — the scheduler's fault tolerance
+        handles whatever it throws."""
+        cfg = self.cfg
+        n, d = x.shape
+        phi = estimate_num_partitions(n, cfg.gamma, cfg.omega)
+        report = BuildReport(n=n, dim=d, phi=phi)
+
+        t0 = time.perf_counter()
+        centroids = self._stage_centroids(x, phi, ckpt)
+        report.timings["centroids"] = time.perf_counter() - t0
+
+        codebook = None
+        if cfg.pq_m > 0:
+            t0 = time.perf_counter()
+            if ckpt is not None and ckpt.exists("pq_codebooks"):
+                codebook = PQCodebook(
+                    codebooks=jnp.asarray(ckpt.load_array("pq_codebooks"))
+                )
+            else:
+                sample_n = min(cfg.sample_size, n)
+                key = jax.random.PRNGKey(cfg.seed + 7)
+                sel = np.asarray(jax.random.choice(key, n, (sample_n,), replace=False))
+                codebook = pq_train(
+                    jax.random.PRNGKey(cfg.seed + 13),
+                    jnp.asarray(x[sel], jnp.float32),
+                    cfg.pq_m,
+                    n_codes=cfg.pq_codes,
+                    iters=cfg.pq_iters,
+                )
+                if ckpt is not None:
+                    ckpt.save_array("pq_codebooks", np.asarray(codebook.codebooks))
+            report.timings["pq_train"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        part, codes = self._stage_partition(x, centroids, codebook, ckpt, progress)
+        report.timings["partition"] = time.perf_counter() - t0
+        report.avg_overlap = part.avg_overlap
+        report.fallback_count = part.fallback_count
+
+        members = part.all_members()
+        members = [m for m in members if len(m) > 0]
+        t0 = time.perf_counter()
+        subgraphs, build_stats = self._stage_build(
+            x, members, ckpt, runner, runner_wrapper
+        )
+        report.timings["build"] = time.perf_counter() - t0
+        report.build_makespan = build_stats["makespan"]
+        report.cost_model = build_stats.get("cost_model", (0.0, 1.0))
+        report.scheduler_events = len(build_stats.get("events", []))
+
+        t0 = time.perf_counter()
+        final, merge_stats = self._stage_merge(x, subgraphs, members, ckpt)
+        report.timings["merge"] = time.perf_counter() - t0
+        report.merge_makespan = merge_stats["makespan"]
+
+        assert final.n == n, f"final graph covers {final.n}/{n} vectors"
+        if cfg.refine_rounds > 0:
+            from repro.core.graph import vamana_refine
+
+            t0 = time.perf_counter()
+            refined = vamana_refine(
+                jnp.asarray(x, jnp.float32), jnp.asarray(final.adj), cfg.r,
+                alpha=cfg.alpha, rounds=cfg.refine_rounds,
+            )
+            final = SubGraph(ids=final.ids, adj=np.asarray(refined))
+            report.timings["refine"] = time.perf_counter() - t0
+        medoid = int(find_medoid(jnp.asarray(x, jnp.float32)))
+        # per-centroid entry points: the member nearest each partition
+        # centroid (centroid-routed search entries)
+        from repro.core.kmeans import pairwise_sq_l2 as _psl
+
+        d2c = np.asarray(
+            _psl(jnp.asarray(centroids, jnp.float32), jnp.asarray(x, jnp.float32))
+        )  # (Φ, N)
+        entry_points = np.argmin(d2c, axis=1).astype(np.int64)
+        # final.ids is sorted == arange(n); local indices are global
+        index = SOGAICIndex(
+            x, final.adj, medoid,
+            centroids=centroids, entry_points=entry_points,
+            pq_codebook=codebook, pq_codes=codes,
+        )
+        report.graph = graph_stats(final.adj)
+        if ckpt is not None:
+            index.save(ckpt)
+            ckpt.mark_stage("finalize")
+        return index, report

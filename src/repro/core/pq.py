@@ -1,0 +1,126 @@
+"""Product quantization — trained once, encoded in the partition chunk pipeline.
+
+The paper (§2.1, Fig. 1c) runs quantization encoding *in parallel with* the
+vector-assignment stage so each vector is encoded exactly once and the codes
+are merged downstream, instead of DiskANN's separate sequential pass.  The
+pipeline in :mod:`repro.core.pipeline` calls :func:`pq_encode` on the same
+device-resident chunk that :func:`repro.core.partition.assign_chunk` consumes
+— one HBM round-trip for both stages.
+
+Layout: D-dim vectors split into M contiguous subspaces of D/M dims, each
+with a 256-entry codebook (uint8 codes).  ADC (asymmetric distance
+computation) builds per-query lookup tables so graph-search distance
+evaluations become M table gathers instead of D-dim float ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_fit, pairwise_sq_l2
+
+__all__ = ["PQCodebook", "pq_train", "pq_encode", "pq_decode", "adc_lookup_tables", "adc_distances"]
+
+
+class PQCodebook(NamedTuple):
+    """(M, n_codes, D/M) float32 codebooks."""
+
+    codebooks: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def n_codes(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+
+def pq_train(
+    key: jax.Array,
+    x: jax.Array,
+    m: int,
+    *,
+    n_codes: int = 256,
+    iters: int = 20,
+) -> PQCodebook:
+    """Train per-subspace k-means codebooks on a sample ``x`` (n, d)."""
+    n, d = x.shape
+    if d % m != 0:
+        raise ValueError(f"d={d} not divisible by M={m}")
+    dsub = d // m
+    xs = x.reshape(n, m, dsub).transpose(1, 0, 2)  # (M, n, dsub)
+
+    def fit_one(k, xsub):
+        return kmeans_fit(k, xsub, n_codes, max_iters=iters, init="random").centroids
+
+    codebooks = jax.vmap(fit_one)(jax.random.split(key, m), xs)
+    return PQCodebook(codebooks=codebooks)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pq_encode(x: jax.Array, codebook: PQCodebook) -> jax.Array:
+    """Encode ``x`` (n, d) → codes (n, M) uint8.
+
+    Per-subspace distance + argmin; the TPU hot path is the fused Pallas
+    kernel in :mod:`repro.kernels` (``pq_encode``) — this jnp form is the
+    oracle / CPU path and is numerically identical.
+    """
+    n, d = x.shape
+    m, n_codes, dsub = codebook.codebooks.shape
+    xs = x.reshape(n, m, dsub).transpose(1, 0, 2)  # (M, n, dsub)
+
+    def enc_one(xsub, cb):
+        return jnp.argmin(pairwise_sq_l2(xsub, cb), axis=-1)
+
+    codes = jax.vmap(enc_one)(xs, codebook.codebooks)  # (M, n)
+    return codes.T.astype(jnp.uint8)
+
+
+@jax.jit
+def pq_decode(codes: jax.Array, codebook: PQCodebook) -> jax.Array:
+    """codes (n, M) uint8 → approximate vectors (n, d)."""
+    m = codebook.m
+
+    def dec_one(codes_m, cb):
+        return cb[codes_m.astype(jnp.int32)]
+
+    parts = jax.vmap(dec_one)(codes.T, codebook.codebooks)  # (M, n, dsub)
+    return parts.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+
+
+@jax.jit
+def adc_lookup_tables(queries: jax.Array, codebook: PQCodebook) -> jax.Array:
+    """Per-query ADC tables: (q, M, n_codes) squared distances."""
+    q, d = queries.shape
+    m, n_codes, dsub = codebook.codebooks.shape
+    qs = queries.reshape(q, m, dsub).transpose(1, 0, 2)  # (M, q, dsub)
+
+    def tab_one(qsub, cb):
+        return pairwise_sq_l2(qsub, cb)  # (q, n_codes)
+
+    tabs = jax.vmap(tab_one)(qs, codebook.codebooks)  # (M, q, n_codes)
+    return tabs.transpose(1, 0, 2)
+
+
+@jax.jit
+def adc_distances(luts: jax.Array, codes: jax.Array) -> jax.Array:
+    """Approximate squared distances: luts (q, M, 256) × codes (n, M) → (q, n).
+
+    On TPU the gather is reformulated per subspace as a one-hot contraction
+    when ``n`` is large (MXU-friendly); jnp.take_along_axis is the oracle.
+    """
+    c = codes.astype(jnp.int32)  # (n, M)
+
+    def per_query(lut):  # lut (M, 256)
+        return jnp.take_along_axis(lut.T, c, axis=0).sum(axis=1)  # (n,)
+
+    return jax.vmap(per_query)(luts)

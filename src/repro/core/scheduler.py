@@ -1,0 +1,245 @@
+"""Load-balancing task scheduling (paper §2.2, Fig. 2a).
+
+Static plan: **LPT** (longest processing time first) — subsets sorted by
+size descending, each assigned to the least-loaded worker; with the linear
+cost model (build time ∝ subset size, the paper's observation) this is the
+classic (4/3 − 1/(3m))·OPT greedy.  Γ from the partitioning stage bounds
+the largest task, so no container overloads — exactly why the paper can
+use greedy LPT instead of BDSC/LSSP-class schedulers.
+
+Dynamic runtime: :class:`ClusterScheduler` — an event-driven executor that
+adds the properties a 1000+-node deployment needs:
+
+  * **fault tolerance** — failed tasks are re-queued and re-assigned
+  * **straggler mitigation** — tasks running > ``straggler_factor`` × the
+    expected time get a speculative duplicate on the fastest idle worker;
+    first completion wins, the loser is cancelled
+  * **elasticity** — workers may join/leave between events; queued work is
+    re-balanced
+
+The scheduler is a host-side component (it decides *where* device work
+runs); it is exercised directly by the build pipeline and the cluster
+simulator (repro.distributed.cluster_sim) injects failures/stragglers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import defaultdict
+from typing import Callable, Iterable
+
+import numpy as np
+
+__all__ = ["lpt_schedule", "ScheduledTask", "ClusterScheduler", "makespan_lower_bound"]
+
+
+def lpt_schedule(costs: Iterable[float], n_workers: int):
+    """LPT: sort tasks by cost desc; assign each to the least-loaded worker.
+
+    Returns (assignment: list[list[task_idx]] per worker, makespan: float).
+    """
+    costs = list(costs)
+    if n_workers < 1:
+        raise ValueError("need at least one worker")
+    order = sorted(range(len(costs)), key=lambda i: -costs[i])
+    heap = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(heap)
+    assignment: list[list[int]] = [[] for _ in range(n_workers)]
+    for t in order:
+        load, w = heapq.heappop(heap)
+        assignment[w].append(t)
+        heapq.heappush(heap, (load + costs[t], w))
+    makespan = max((sum(costs[t] for t in a) for a in assignment), default=0.0)
+    return assignment, makespan
+
+
+def makespan_lower_bound(costs: Iterable[float], n_workers: int) -> float:
+    costs = list(costs)
+    if not costs:
+        return 0.0
+    return max(sum(costs) / n_workers, max(costs))
+
+
+@dataclasses.dataclass
+class ScheduledTask:
+    task_id: int
+    cost: float  # predicted cost (∝ subset size for builds)
+    priority: float = 0.0  # higher first (e.g. merge overlap count)
+    payload: object = None
+    attempts: int = 0
+    speculative_of: int | None = None
+
+
+@dataclasses.dataclass
+class _Worker:
+    worker_id: int
+    speed: float = 1.0  # relative throughput
+    alive: bool = True
+    busy_until: float = 0.0
+    current: ScheduledTask | None = None
+
+
+class ClusterScheduler:
+    """Event-driven dynamic scheduler with retries, speculation, elasticity.
+
+    Time is virtual: the caller supplies a ``runner(task, worker_id)`` that
+    returns the *actual* duration (the cluster simulator returns perturbed
+    durations; the real pipeline returns measured wall time).  ``run()``
+    advances a virtual clock over completion events — the standard
+    list-scheduling discrete-event loop.
+    """
+
+    def __init__(
+        self,
+        n_workers: int,
+        *,
+        straggler_factor: float = 3.0,
+        max_attempts: int = 4,
+        speculation: bool = True,
+    ) -> None:
+        self.workers: dict[int, _Worker] = {
+            w: _Worker(worker_id=w) for w in range(n_workers)
+        }
+        self.straggler_factor = straggler_factor
+        self.max_attempts = max_attempts
+        self.speculation = speculation
+        self.log: list[dict] = []
+        self._next_worker_id = n_workers
+
+    # -- elasticity ---------------------------------------------------------
+    def add_worker(self, speed: float = 1.0) -> int:
+        wid = self._next_worker_id
+        self._next_worker_id += 1
+        self.workers[wid] = _Worker(worker_id=wid, speed=speed)
+        return wid
+
+    def remove_worker(self, worker_id: int) -> None:
+        if worker_id in self.workers:
+            self.workers[worker_id].alive = False
+
+    # -- main loop ----------------------------------------------------------
+    def run(
+        self,
+        tasks: list[ScheduledTask],
+        runner: Callable[[ScheduledTask, int], float | None],
+        *,
+        on_complete: Callable[[ScheduledTask, int, float], None] | None = None,
+    ) -> dict:
+        """Execute all tasks; returns {makespan, per_worker_load, events}.
+
+        ``runner`` returns the task's duration on that worker, or ``None``
+        to signal a worker failure (task will be retried elsewhere).
+        """
+        # priority: higher priority first, then larger cost (LPT within class)
+        queue = sorted(tasks, key=lambda t: (-t.priority, -t.cost))
+        pending = list(queue)
+        completed: dict[int, float] = {}
+        running: list[tuple[float, int, ScheduledTask]] = []  # (finish, worker, task)
+        clock = 0.0
+        last_completion = 0.0
+        expected: dict[int, float] = {}
+
+        def idle_workers():
+            busy = {w for _, w, _ in running}
+            return [
+                w
+                for w, st in self.workers.items()
+                if st.alive and w not in busy
+            ]
+
+        def launch(task: ScheduledTask, wid: int, now: float):
+            task.attempts += 1
+            dur = runner(task, wid)
+            if dur is None:  # worker died mid-task
+                self.workers[wid].alive = False
+                self.log.append(
+                    {"t": now, "ev": "worker_failed", "worker": wid, "task": task.task_id}
+                )
+                if task.attempts >= self.max_attempts:
+                    raise RuntimeError(f"task {task.task_id} exceeded max attempts")
+                pending.insert(0, task)
+                return
+            dur = dur / self.workers[wid].speed
+            heapq.heappush(running, (now + dur, wid, task))
+            expected.setdefault(task.task_id, task.cost)
+            self.log.append(
+                {"t": now, "ev": "launch", "worker": wid, "task": task.task_id, "dur": dur}
+            )
+
+        while pending or running:
+            # fill idle workers
+            for wid in idle_workers():
+                if not pending:
+                    break
+                launch(pending.pop(0), wid, clock)
+            if not running:
+                if pending and not idle_workers():
+                    raise RuntimeError("no alive workers remain")
+                continue
+            finish, wid, task = heapq.heappop(running)
+            clock = max(clock, finish)
+            base = task.speculative_of if task.speculative_of is not None else task.task_id
+            if base in completed:
+                # a speculative twin already finished; drop this copy
+                self.log.append({"t": clock, "ev": "cancelled", "task": task.task_id})
+                continue
+            completed[base] = clock
+            last_completion = clock
+            self.log.append({"t": clock, "ev": "done", "worker": wid, "task": task.task_id})
+            if on_complete is not None:
+                on_complete(task, wid, clock)
+            # straggler speculation: any running task past factor×expected?
+            if self.speculation and pending == [] and running:
+                for fin, w2, t2 in list(running):
+                    base2 = t2.speculative_of if t2.speculative_of is not None else t2.task_id
+                    if base2 in completed:
+                        continue
+                    exp = expected.get(t2.task_id, t2.cost)
+                    if fin - clock > (self.straggler_factor - 1.0) * max(exp, 1e-9):
+                        idle = idle_workers()
+                        if idle:
+                            dup = ScheduledTask(
+                                task_id=-t2.task_id - 1,
+                                cost=t2.cost,
+                                priority=t2.priority,
+                                payload=t2.payload,
+                                speculative_of=base2,
+                            )
+                            launch(dup, idle[0], clock)
+                            self.log.append(
+                                {"t": clock, "ev": "speculate", "task": t2.task_id}
+                            )
+
+        loads = defaultdict(float)
+        for ev in self.log:
+            if ev["ev"] == "launch":
+                loads[ev["worker"]] += ev["dur"]
+        return {
+            # makespan = time of the last real completion; abandoned
+            # straggler attempts (first-finisher-wins losers) are killed,
+            # not waited for
+            "makespan": last_completion,
+            "per_worker_load": dict(loads),
+            "events": self.log,
+            "n_completed": len(completed),
+        }
+
+
+def predict_build_cost(subset_size: int, dim: int, *, c0: float = 0.0, c1: float = 1.0) -> float:
+    """Linear cost model t ≈ c0 + c1·n — the paper's 'near-linear
+    relationship between ANNS graph construction time and dataset size'.
+    Coefficients are fit online from completed tasks by the pipeline."""
+    return c0 + c1 * float(subset_size) * float(dim) / 1e6
+
+
+def fit_linear_cost(sizes: np.ndarray, times: np.ndarray) -> tuple[float, float]:
+    """Least-squares (c0, c1) for the linear cost model; robust to n=1."""
+    sizes = np.asarray(sizes, np.float64)
+    times = np.asarray(times, np.float64)
+    if len(sizes) < 2:
+        c1 = float(times[0] / max(sizes[0], 1.0)) if len(sizes) else 1.0
+        return 0.0, c1
+    a = np.stack([np.ones_like(sizes), sizes], axis=1)
+    coef, *_ = np.linalg.lstsq(a, times, rcond=None)
+    return float(coef[0]), float(coef[1])

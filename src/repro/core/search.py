@@ -1,0 +1,149 @@
+"""Batched best-first (beam) search over an ANNS graph.
+
+Jittable, fixed-shape reformulation of the classic GreedySearch used by
+Vamana/DiskANN: a beam of ``L`` (id, dist, expanded) entries, one expansion
+per step, candidate merge via a two-key sort dedup (no hash sets on TPU).
+vmapped over a query batch — this is both the serving path and the
+candidate generator for the optional Vamana refinement rounds.
+
+Early exit: ``lax.while_loop`` over steps, stopping when the beam holds no
+unexpanded candidate (vmap turns this into an any-lane-active loop).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SearchResult", "beam_search", "beam_search_single", "recall_at_k", "brute_force_topk"]
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array  # (q, k) int32 — nearest ids, ascending distance
+    dists: jax.Array  # (q, k) float32 — L2 distances
+    visited: jax.Array  # (q, V) int32 — expansion history (-1 pad)
+    n_hops: jax.Array  # (q,) int32 — expansions performed
+
+
+def _merge_dedup(ids, dists, expanded, beam_l):
+    """Sort by (id, expanded-first), drop duplicate ids, sort by distance.
+
+    The expanded copy of a node must survive dedup (its flag is the search
+    state); encoding ``key = id·2 + (1 − expanded)`` makes it sort first
+    among equal ids.
+    """
+    # Two stable sorts = lexicographic (id asc, expanded first) without any
+    # widening: sort by the secondary key, then stably by the primary.
+    order_a = jnp.argsort(1 - expanded.astype(jnp.int32), stable=True)
+    ids_a, dists_a, exp_a = ids[order_a], dists[order_a], expanded[order_a]
+    primary = jnp.where(ids_a >= 0, ids_a, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(primary, stable=True)
+    ids_s = ids_a[order]
+    dists_s = dists_a[order]
+    exp_s = exp_a[order]
+    dup = jnp.concatenate([jnp.zeros((1,), bool), ids_s[1:] == ids_s[:-1]])
+    dists_s = jnp.where(dup | (ids_s < 0), jnp.inf, dists_s)
+    order2 = jnp.argsort(dists_s)
+    ids2 = jnp.where(jnp.isfinite(dists_s[order2]), ids_s[order2], -1)
+    return ids2[:beam_l], dists_s[order2][:beam_l], exp_s[order2][:beam_l]
+
+
+def beam_search_single(
+    x: jax.Array,
+    adj: jax.Array,
+    query: jax.Array,
+    entry: jax.Array,
+    *,
+    beam_l: int,
+    max_hops: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Beam search for one query.  Returns (ids (L,), dists (L,), visited, hops)."""
+    n, r = adj.shape
+    q32 = query.astype(jnp.float32)
+
+    d0 = jnp.sqrt(jnp.maximum(jnp.sum((x[entry].astype(jnp.float32) - q32) ** 2), 0.0))
+    beam_ids = jnp.full((beam_l,), -1, jnp.int32).at[0].set(entry.astype(jnp.int32))
+    beam_d = jnp.full((beam_l,), jnp.inf, jnp.float32).at[0].set(d0)
+    beam_exp = jnp.zeros((beam_l,), bool)
+    visited = jnp.full((max_hops,), -1, jnp.int32)
+
+    def cond(state):
+        _, beam_d, beam_exp, beam_ids, _, t = state
+        frontier = (beam_ids >= 0) & ~beam_exp & jnp.isfinite(beam_d)
+        return jnp.logical_and(t < max_hops, jnp.any(frontier))
+
+    def body(state):
+        beam_ids, beam_d, beam_exp, _, visited, t = state
+        masked = jnp.where((beam_ids >= 0) & ~beam_exp, beam_d, jnp.inf)
+        j = jnp.argmin(masked)
+        node = beam_ids[j]
+        beam_exp = beam_exp.at[j].set(True)
+        visited = visited.at[t].set(node)
+        nbrs = adj[jnp.maximum(node, 0)]
+        nv = x[jnp.maximum(nbrs, 0)].astype(jnp.float32)
+        nd = jnp.sqrt(jnp.maximum(jnp.sum((nv - q32[None, :]) ** 2, axis=-1), 0.0))
+        nd = jnp.where(nbrs >= 0, nd, jnp.inf)
+        all_ids = jnp.concatenate([beam_ids, nbrs])
+        all_d = jnp.concatenate([beam_d, nd])
+        all_exp = jnp.concatenate([beam_exp, jnp.zeros((r,), bool)])
+        bi, bd, be = _merge_dedup(all_ids, all_d, all_exp, beam_l)
+        return bi, bd, be, bi, visited, t + 1
+
+    state = (beam_ids, beam_d, beam_exp, beam_ids, visited, jnp.int32(0))
+    beam_ids, beam_d, beam_exp, _, visited, hops = jax.lax.while_loop(cond, body, state)
+    return beam_ids, beam_d, visited, hops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam_l", "max_hops"))
+def beam_search(
+    x: jax.Array,
+    adj: jax.Array,
+    queries: jax.Array,
+    entry: jax.Array,
+    *,
+    k: int = 10,
+    beam_l: int = 64,
+    max_hops: int = 96,
+) -> SearchResult:
+    """Batched beam search.  ``queries`` (q, d); ``entry`` is either a
+    scalar (shared medoid) or a (q,) array of per-query entry points
+    (centroid-routed entries — see SOGAICIndex.search)."""
+    beam_l = max(beam_l, k)
+    if jnp.ndim(entry) == 0:
+        entry = jnp.broadcast_to(entry, (queries.shape[0],))
+
+    def one(query, ent):
+        ids, dists, visited, hops = beam_search_single(
+            x, adj, query, ent, beam_l=beam_l, max_hops=max_hops
+        )
+        return ids[:k], dists[:k], visited, hops
+
+    ids, dists, visited, hops = jax.vmap(one)(queries, entry)
+    return SearchResult(ids=ids, dists=dists, visited=visited, n_hops=hops)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_force_topk(x: jax.Array, queries: jax.Array, k: int):
+    """Exact ground truth (q, k) for recall evaluation."""
+    x = x.astype(jnp.float32)
+    q = queries.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1)[None, :]
+    q2 = jnp.sum(q * q, axis=-1)[:, None]
+    d2 = jnp.maximum(q2 - 2.0 * (q @ x.T) + x2, 0.0)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx.astype(jnp.int32)
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean |found ∩ true| / k over the query batch."""
+    found_ids = np.asarray(found_ids)
+    true_ids = np.asarray(true_ids)
+    q, k = true_ids.shape
+    hits = 0
+    for i in range(q):
+        hits += len(set(found_ids[i].tolist()) & set(true_ids[i].tolist()))
+    return hits / (q * k)

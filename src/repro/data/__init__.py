@@ -1,0 +1,17 @@
+"""Datasets: synthetic generators, Table-1 mirror registry, LID, loaders."""
+
+from repro.data.synthetic import make_clustered, make_uniform, make_planted_manifold
+from repro.data.datasets import DATASETS, DatasetSpec, generate_dataset
+from repro.data.lid import estimate_lid
+from repro.data.loader import ChunkLoader
+
+__all__ = [
+    "make_clustered",
+    "make_uniform",
+    "make_planted_manifold",
+    "DATASETS",
+    "DatasetSpec",
+    "generate_dataset",
+    "estimate_lid",
+    "ChunkLoader",
+]

@@ -1,0 +1,70 @@
+"""Sharded, prefetching chunk loader for the partition/encode stream.
+
+The 10B deployment streams vectors from distributed storage; each host
+reads its shard and double-buffers the next chunk's host→device transfer
+while the current chunk is being assigned (compute/transfer overlap —
+DESIGN.md §4).  This loader reproduces that structure over an in-memory
+or memory-mapped array:
+
+  * ``shard(host_id, n_hosts)`` — static range sharding
+  * background prefetch thread keeps ``prefetch`` chunks ready
+  * final partial chunk is padded + masked (same contract as
+    ``assign_chunk``'s ``valid`` argument)
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+__all__ = ["ChunkLoader"]
+
+
+class ChunkLoader:
+    def __init__(
+        self,
+        x: np.ndarray,
+        chunk_size: int,
+        *,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        prefetch: int = 2,
+        start_chunk: int = 0,
+    ) -> None:
+        n = x.shape[0]
+        per = -(-n // n_hosts)
+        self.lo = min(host_id * per, n)
+        self.hi = min(self.lo + per, n)
+        self.x = x
+        self.chunk_size = chunk_size
+        self.start_chunk = start_chunk
+        self.n_chunks = -(-(self.hi - self.lo) // chunk_size) if self.hi > self.lo else 0
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, prefetch))
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._started = False
+
+    def _produce(self) -> None:
+        d = self.x.shape[1]
+        for ci in range(self.start_chunk, self.n_chunks):
+            lo = self.lo + ci * self.chunk_size
+            hi = min(lo + self.chunk_size, self.hi)
+            chunk = np.asarray(self.x[lo:hi], dtype=np.float32)
+            valid = np.ones((self.chunk_size,), bool)
+            if hi - lo < self.chunk_size:
+                pad = self.chunk_size - (hi - lo)
+                chunk = np.concatenate([chunk, np.zeros((pad, d), np.float32)])
+                valid[hi - lo :] = False
+            self._q.put((ci, lo, hi, chunk, valid))
+        self._q.put(None)
+
+    def __iter__(self):
+        if not self._started:
+            self._thread.start()
+            self._started = True
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            yield item

@@ -1,0 +1,28 @@
+"""Distributed runtime: sharded SOGAIC steps, cluster simulation, collectives.
+
+``steps.py`` holds the pjit/shard_map formulations of every pipeline stage
+— these are the functions the multi-pod dry-run lowers and compiles, and
+the roofline analysis reads.  ``cluster_sim.py`` provides the virtual
+cluster (failures, stragglers, elasticity) that exercises the scheduler's
+fault-tolerance paths without real hardware.
+"""
+
+from repro.distributed.steps import (
+    data_axes,
+    make_assign_step,
+    make_build_step,
+    make_knn_step,
+    make_merge_step,
+    make_pq_encode_step,
+)
+from repro.distributed.cluster_sim import SimulatedCluster
+
+__all__ = [
+    "data_axes",
+    "make_assign_step",
+    "make_build_step",
+    "make_knn_step",
+    "make_merge_step",
+    "make_pq_encode_step",
+    "SimulatedCluster",
+]

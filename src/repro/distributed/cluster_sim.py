@@ -1,0 +1,74 @@
+"""Virtual cluster: failure / straggler / heterogeneity injection.
+
+Wraps any task runner with the misbehaviors a 1000+-node fleet exhibits,
+so the scheduler's fault-tolerance machinery (retries, speculative
+duplicates, elastic re-balance) is exercised deterministically in tests
+and benchmarks:
+
+  * ``fail_prob``       — worker dies mid-task (runner returns None;
+                          ClusterScheduler re-queues the task)
+  * ``straggler_prob``  — task runs ``straggler_slowdown``× long
+                          (triggers speculation)
+  * ``speed_jitter``    — per-worker heterogeneous throughput
+  * ``cost_runner``     — pure simulation mode: durations from the linear
+                          cost model instead of real compute (used by the
+                          scalability benchmark to sweep worker counts —
+                          Fig. 3 right column)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.scheduler import ScheduledTask
+
+__all__ = ["SimulatedCluster"]
+
+
+@dataclasses.dataclass
+class SimulatedCluster:
+    n_workers: int
+    fail_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 5.0
+    speed_jitter: float = 0.0
+    seed: int = 0
+    max_failures: int | None = None
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+        self._speeds = 1.0 + self.speed_jitter * self._rng.standard_normal(
+            self.n_workers
+        ).clip(-0.9, 3.0)
+        self._failures = 0
+
+    def wrap(self, runner: Callable[[ScheduledTask, int], float]) -> Callable:
+        """Wrap a real runner: inject failures/stragglers around it."""
+
+        def wrapped(task: ScheduledTask, worker_id: int):
+            if self.fail_prob > 0 and self._rng.random() < self.fail_prob:
+                if self.max_failures is None or self._failures < self.max_failures:
+                    self._failures += 1
+                    return None  # worker died; scheduler re-queues
+            dur = runner(task, worker_id)
+            if dur is None:
+                return None
+            if self.straggler_prob > 0 and self._rng.random() < self.straggler_prob:
+                dur = dur * self.straggler_slowdown
+            speed = self._speeds[worker_id % len(self._speeds)]
+            return float(dur / max(speed, 0.1))
+
+        return wrapped
+
+    def cost_runner(self, *, noise: float = 0.05) -> Callable:
+        """Pure-simulation runner: duration = task.cost (± noise), with
+        the same failure/straggler injection — no real compute."""
+
+        def base(task: ScheduledTask, worker_id: int) -> float:
+            eps = 1.0 + noise * float(self._rng.standard_normal())
+            return float(task.cost) * max(eps, 0.01)
+
+        return self.wrap(base)

@@ -1,0 +1,260 @@
+"""pjit/shard_map formulations of the SOGAIC pipeline stages.
+
+These are the production device programs.  The mapping (DESIGN.md §4):
+
+  assign     vectors sharded over (pod, data); centroid table sharded over
+             ``model`` (each model shard scores its Φ/TP centroids, local
+             top-k, all-gather + re-top-k — the TP pattern); capacity
+             counters quota-split per data shard and psum'd back
+  knn        queries over (pod, data), db rows over ``model`` — local fused
+             L2+top-k then all-gather merge (lets Γ exceed device memory)
+  build      one subset per device across the *flattened* mesh (the paper's
+             "scale by adding low-resource workers"), each device running
+             the dense tiled kNN→prune build on its subset
+  merge      union-vector table replicated, overlap rows sharded across the
+             flattened mesh; optional pod-ring ``ppermute`` models the
+             agglomerative exchange of finished subgraphs between pods
+  pq_encode  vectors sharded over (pod, data), codebooks replicated
+
+Every factory returns ``(step_fn, in_specs)`` where ``step_fn`` is jitted
+and ``in_specs`` are the `PartitionSpec`s the dry-run uses to build sharded
+``ShapeDtypeStruct`` inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.graph import build_subgraph, prune_candidate_lists
+from repro.core.kmeans import pairwise_sq_l2
+from repro.core.partition import _enforce_capacity, _walk
+
+__all__ = [
+    "data_axes",
+    "flat_axes",
+    "make_assign_step",
+    "make_knn_step",
+    "make_build_step",
+    "make_merge_step",
+    "make_pq_encode_step",
+]
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The batch-parallel axes: ('pod', 'data') ∩ mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def flat_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes — used when every device is an independent worker."""
+    return tuple(mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def make_assign_step(
+    mesh: Mesh,
+    *,
+    omega: int,
+    gamma: int,
+    eps: float,
+    k_cand: int = 32,
+):
+    """Distributed Algorithm-1 chunk step.
+
+    inputs : x (B, d), centroids (Φ, d), sizes (Φ,) int32
+    outputs: kept (B, K) bool, cand_idx (B, K) int32, cand_dist (B, K) f32,
+             added (Φ,) int32  (already psum'd — the new global counts delta)
+    """
+    dp = data_axes(mesh)
+    n_data = _axis_size(mesh, dp)
+    n_model = mesh.shape["model"]
+
+    def body(x_loc, cent_loc, sizes):
+        b_loc = x_loc.shape[0]
+        phi_loc = cent_loc.shape[0]
+        phi = phi_loc * n_model
+        k_loc = min(k_cand, phi_loc)
+        d2 = pairwise_sq_l2(x_loc, cent_loc)  # (B_loc, Φ_loc) — MXU tile
+        neg, idx = jax.lax.top_k(-d2, k_loc)
+        mi = jax.lax.axis_index("model")
+        idx_g = idx.astype(jnp.int32) + mi.astype(jnp.int32) * phi_loc
+        # TP merge: gather each model shard's local top-k, re-top-k.
+        gd = jax.lax.all_gather(neg, "model")  # (nm, B_loc, k_loc)
+        gi = jax.lax.all_gather(idx_g, "model")
+        gd = jnp.transpose(gd, (1, 0, 2)).reshape(b_loc, n_model * k_loc)
+        gi = jnp.transpose(gi, (1, 0, 2)).reshape(b_loc, n_model * k_loc)
+        kk = min(k_cand, n_model * k_loc)
+        neg2, sel = jax.lax.top_k(gd, kk)
+        cand_idx = jnp.take_along_axis(gi, sel, axis=1)
+        cand_dist = jnp.sqrt(jnp.maximum(-neg2, 0.0))
+        # ε-relaxed walk against the global snapshot
+        full = sizes[cand_idx] >= gamma
+        want = jax.vmap(_walk, in_axes=(0, 0, None, None))(
+            cand_dist, full, omega, jnp.float32(eps)
+        )
+        # per-data-shard capacity quota (chunk-synchronous semantics)
+        remaining = jnp.maximum(gamma - sizes, 0).astype(jnp.int32) // n_data
+        kept = _enforce_capacity(want, cand_idx, cand_dist, remaining, phi)
+        added_loc = jax.ops.segment_sum(
+            kept.reshape(-1).astype(jnp.int32),
+            cand_idx.reshape(-1),
+            num_segments=phi,
+        )
+        added = jax.lax.psum(added_loc, dp)
+        return kept, cand_idx, cand_dist, added
+
+    in_specs = (P(dp, None), P("model", None), P())
+    out_specs = (P(dp, None), P(dp, None), P(dp, None), P())
+    # outputs are deterministically replicated across 'model' after the
+    # all-gather merge; the static vma checker cannot infer that.
+    fn = jax.jit(
+        jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    )
+    return fn, in_specs
+
+
+def make_knn_step(mesh: Mesh, *, k: int, score_dtype=jnp.float32):
+    """TP exact-kNN: queries over (pod, data); db rows over ``model``.
+
+    inputs : q (B, d), db (N, d)
+    outputs: dists (B, k) f32 ascending, idx (B, k) int32 (global rows)
+
+    ``score_dtype=bfloat16`` halves the HBM bytes of the dominant (B, N)
+    distance tile (§Perf hillclimb): candidate generation tolerates bf16
+    ranking noise because the graph-build re-prunes with exact distances.
+    """
+    dp = data_axes(mesh)
+    n_model = mesh.shape["model"]
+
+    def body(q_loc, db_loc):
+        b_loc = q_loc.shape[0]
+        n_loc = db_loc.shape[0]
+        if score_dtype == jnp.bfloat16:
+            qb = q_loc.astype(jnp.bfloat16)
+            dbb = db_loc.astype(jnp.bfloat16)
+            q2 = jnp.sum(qb.astype(jnp.float32) ** 2, -1, keepdims=True).astype(jnp.bfloat16)
+            c2 = jnp.sum(dbb.astype(jnp.float32) ** 2, -1)[None, :].astype(jnp.bfloat16)
+            qc = jax.lax.dot_general(
+                qb, dbb, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.bfloat16,
+            )
+            d2 = q2 - 2.0 * qc + c2  # (B_loc, N_loc) bf16 tile
+        else:
+            d2 = pairwise_sq_l2(q_loc, db_loc)
+        kk = min(k, n_loc)
+        neg, idx = jax.lax.top_k(-d2, kk)
+        neg = neg.astype(jnp.float32)
+        mi = jax.lax.axis_index("model")
+        idx_g = idx.astype(jnp.int32) + mi.astype(jnp.int32) * n_loc
+        gd = jax.lax.all_gather(neg, "model")  # (nm, B_loc, kk)
+        gi = jax.lax.all_gather(idx_g, "model")
+        gd = jnp.transpose(gd, (1, 0, 2)).reshape(b_loc, n_model * kk)
+        gi = jnp.transpose(gi, (1, 0, 2)).reshape(b_loc, n_model * kk)
+        neg2, sel = jax.lax.top_k(gd, k)
+        return jnp.sqrt(jnp.maximum(-neg2, 0.0)), jnp.take_along_axis(gi, sel, axis=1)
+
+    in_specs = (P(dp, None), P("model", None))
+    out_specs = (P(dp, None), P(dp, None))
+    fn = jax.jit(
+        jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    )
+    return fn, in_specs
+
+
+def make_build_step(
+    mesh: Mesh, *, r: int, alpha: float = 1.2, knn_k: int | None = None
+):
+    """Per-device subset builds across the flattened mesh.
+
+    inputs : x_sub (S, n, d) — S bucketed subsets; n_valid (S,) int32
+    outputs: adj (S, n, R) int32
+    """
+    fa = flat_axes(mesh)
+
+    def body(x_loc, nv_loc):
+        def one(args):
+            xs, nv = args
+            return build_subgraph(
+                xs, r, alpha=alpha, knn_k=knn_k, n_valid=nv,
+                block_q=min(512, xs.shape[0]),
+            )
+
+        return jax.lax.map(one, (x_loc, nv_loc))
+
+    in_specs = (P(fa, None, None), P(fa))
+    out_specs = P(fa, None, None)
+    fn = jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+    return fn, in_specs
+
+
+def make_merge_step(mesh: Mesh, *, r: int, alpha: float = 1.2):
+    """Overlap-region re-prune + pod-ring exchange of finished rows.
+
+    inputs : xu (m, d) replicated union vectors, node_idx (T,), cand (T, C)
+    outputs: rows (T, R) int32 — re-pruned adjacency for the overlap nodes
+    """
+    fa = flat_axes(mesh)
+    has_pod = "pod" in mesh.axis_names
+    n_pod = mesh.shape["pod"] if has_pod else 1
+
+    def body(xu, node_loc, cand_loc):
+        rows = prune_candidate_lists(
+            xu, node_loc, cand_loc, r, alpha=alpha, block=min(256, node_loc.shape[0])
+        )
+        if has_pod and n_pod > 1:
+            # agglomerative exchange: ship finished rows to the partner pod
+            # for the next merge level (ring permute over the pod axis)
+            perm = [(i, (i + 1) % n_pod) for i in range(n_pod)]
+            rows = jax.lax.ppermute(rows, "pod", perm)
+        return rows
+
+    in_specs = (P(None, None), P(fa), P(fa, None))
+    out_specs = P(fa, None)
+    fn = jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+    return fn, in_specs
+
+
+def make_pq_encode_step(mesh: Mesh):
+    """Fused PQ encoding: vectors over (pod, data), codebooks replicated.
+
+    inputs : x (B, d), codebooks (M, K, dsub)
+    outputs: codes (B, M) int32
+    """
+    dp = data_axes(mesh)
+
+    def body(x_loc, codebooks):
+        n = x_loc.shape[0]
+        m, k, dsub = codebooks.shape
+        xs = x_loc.reshape(n, m, dsub).transpose(1, 0, 2)
+
+        def enc(xsub, cb):
+            return jnp.argmin(pairwise_sq_l2(xsub, cb), axis=-1)
+
+        codes = jax.vmap(enc)(xs, codebooks)
+        return codes.T.astype(jnp.int32)
+
+    in_specs = (P(dp, None), P(None, None, None))
+    out_specs = P(dp, None)
+    fn = jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+    return fn, in_specs

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for SOGAIC's compute hot-spots.
+
+Three kernels, each with an explicit-BlockSpec VMEM tiling, a jitted
+wrapper in ``ops.py`` and a pure-jnp oracle in ``ref.py``:
+
+  pairwise_l2  tiled squared-L2 distance (the MXU workhorse everywhere)
+  l2_topk      fused distance + running top-k (kNN build, Algorithm-1
+               candidate generation) — collapses O(M·N) HBM traffic to
+               O(M·k)
+  pq_encode    fused per-subspace distance + argmin (PQ encoding in the
+               partition chunk pipeline)
+
+On this CPU container the kernels are validated in ``interpret=True``
+mode against the oracles; ``ops.py`` dispatches to compiled Pallas on TPU.
+"""
+
+from repro.kernels.ops import l2_topk, pairwise_l2, pq_encode_codes
+
+__all__ = ["pairwise_l2", "l2_topk", "pq_encode_codes"]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused product-quantization encoding.
+
+Runs inside the partition chunk pipeline (paper Fig. 1c — PQ encoding
+parallel with vector assignment, each vector encoded exactly once).  For a
+chunk of vectors the kernel computes, per subspace, the distances to all
+K codewords and the argmin — one (bb, dsub)×(dsub, K) MXU matmul plus a
+VPU argmin per (block, subspace) grid cell, with codes written straight
+back as int32 (cast to uint8 at the ops layer).
+
+Grid (B/bb, M): x viewed as (B, M, dsub), codebooks (M, K, dsub).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pq_encode_kernel", "pq_encode_pallas"]
+
+
+def pq_encode_kernel(x_ref, cb_ref, out_ref):
+    """x (bb, 1, dsub); cb (1, K, dsub); out (bb, 1) int32."""
+    xb = x_ref[...][:, 0, :].astype(jnp.float32)  # (bb, dsub)
+    cb = cb_ref[...][0].astype(jnp.float32)  # (K, dsub)
+    x2 = jnp.sum(xb * xb, axis=1, keepdims=True)
+    c2 = jnp.sum(cb * cb, axis=1, keepdims=True).T
+    xc = jax.lax.dot_general(
+        xb, cb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = x2 + c2 - 2.0 * xc  # (bb, K)
+    out_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def pq_encode_pallas(
+    x: jax.Array,
+    codebooks: jax.Array,
+    *,
+    bb: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """PQ codes (n, M) int32; n must tile by bb (ops.py pads)."""
+    n, d = x.shape
+    m, k, dsub = codebooks.shape
+    assert d == m * dsub, (d, m, dsub)
+    assert n % bb == 0, (n, bb)
+    x3 = x.reshape(n, m, dsub)
+    grid = (n // bb, m)
+    return pl.pallas_call(
+        pq_encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 1, dsub), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, dsub), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(x3, codebooks)

@@ -1,0 +1,541 @@
+"""Dry-run cells: one (architecture × input-shape) unit of lowering.
+
+A *cell* packages, for a given mesh:
+  * the jitted step function (train_step / serve_step / pipeline stage)
+  * sharded ``ShapeDtypeStruct`` stand-ins for every input (no allocation)
+  * optional output shardings (params/opt/caches keep their layouts)
+
+``build_cell(arch_id, shape_name, mesh)`` → (fn, args, out_shardings).
+The dry-run lowers ``fn`` against ``args``, compiles, and extracts the
+memory/cost/collective numbers for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import (
+    GNNConfig,
+    GNNShape,
+    LMConfig,
+    LMShape,
+    RecsysConfig,
+    RecsysShape,
+    SogaicCellConfig,
+)
+from repro.models import embedding as emb_mod
+from repro.models.gnn import init_gat_params
+from repro.models.recsys import (
+    init_recsys_params,
+    recsys_logits,
+    retrieval_scores,
+    two_tower_embed,
+)
+from repro.models.transformer import (
+    init_lm_params,
+    lm_cache_shape,
+    lm_cache_spec,
+    lm_decode_step,
+    lm_param_specs,
+    lm_prefill,
+)
+from repro.training.optimizer import init_adamw
+from repro.training.train_loop import (
+    make_gnn_batched_train_step,
+    make_gnn_train_step,
+    make_lm_train_step,
+    make_recsys_train_step,
+)
+
+__all__ = ["list_cells", "build_cell", "CellInfo"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CellInfo:
+    arch_id: str
+    shape_name: str
+    kind: str
+    skip_reason: str | None = None
+
+
+def _dp(mesh_axes) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp(mesh.axis_names)]))
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _sds(mesh: Mesh, shape, dtype, spec: P) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+def _shaped_tree(mesh: Mesh, shapes_tree, specs_tree):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=_ns(mesh, sp)),
+        shapes_tree,
+        specs_tree,
+    )
+
+
+def _ns_tree(mesh: Mesh, specs_tree):
+    return jax.tree.map(lambda sp: _ns(mesh, sp), specs_tree)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_activate(cfg: LMConfig, mesh: Mesh) -> LMConfig:
+    """Attach activation-sharding axes for this mesh (see LMConfig)."""
+    return dataclasses.replace(
+        cfg,
+        act_dp=_dp(mesh.axis_names),
+        act_tp="model" if "model" in mesh.axis_names else None,
+    )
+
+
+def _lm_param_struct(cfg: LMConfig, mesh: Mesh):
+    specs = lm_param_specs(cfg, mesh.axis_names)
+    shapes = jax.eval_shape(
+        functools.partial(init_lm_params, cfg=cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    return _shaped_tree(mesh, shapes, specs), specs
+
+
+def _lm_opt_struct(cfg: LMConfig, mesh: Mesh, params_sds, specs):
+    opt_shapes = jax.eval_shape(
+        functools.partial(init_adamw, moment_dtype=cfg.moment_dtype), params_sds
+    )
+    opt_specs = type(opt_shapes)(m=specs, v=specs, step=P())
+    return _shaped_tree(mesh, opt_shapes, opt_specs), opt_specs
+
+
+def _lm_train_cell(cfg: LMConfig, shape: LMShape, mesh: Mesh):
+    cfg = _lm_activate(cfg, mesh)
+    dp = _dp(mesh.axis_names)
+    params_sds, specs = _lm_param_struct(cfg, mesh)
+    opt_sds, opt_specs = _lm_opt_struct(cfg, mesh, params_sds, specs)
+    b, s = shape.global_batch, shape.seq_len
+    batch_sds = {
+        "tokens": _sds(mesh, (b, s), jnp.int32, P(dp, None)),
+        "labels": _sds(mesh, (b, s), jnp.int32, P(dp, None)),
+    }
+    step = make_lm_train_step(cfg, dp_size=_dp_size(mesh), param_specs=specs)
+    metric_shapes = jax.eval_shape(step, params_sds, opt_sds, batch_sds)[2]
+    out_shardings = (
+        _ns_tree(mesh, specs),
+        _ns_tree(mesh, opt_specs),
+        jax.tree.map(lambda _: _ns(mesh, P()), metric_shapes),
+    )
+    fn = jax.jit(step, out_shardings=out_shardings, donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, batch_sds)
+
+
+def _lm_prefill_cell(cfg: LMConfig, shape: LMShape, mesh: Mesh):
+    cfg = _lm_activate(cfg, mesh)
+    dp = _dp(mesh.axis_names)
+    params_sds, specs = _lm_param_struct(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _sds(mesh, (b, s), jnp.int32, P(dp, None))
+    cache_spec = lm_cache_spec(cfg, mesh.axis_names)
+    vocab_tp = "model" if "model" in mesh.axis_names else None
+
+    def step(params, tokens):
+        return lm_prefill(params, tokens, cfg, dp_size=_dp_size(mesh))
+
+    fn = jax.jit(
+        step,
+        out_shardings=(_ns(mesh, P(dp, vocab_tp)), _ns(mesh, cache_spec)),
+    )
+    return fn, (params_sds, tokens)
+
+
+def _lm_decode_cell(cfg: LMConfig, shape: LMShape, mesh: Mesh):
+    cfg = _lm_activate(cfg, mesh)
+    dp = _dp(mesh.axis_names)
+    params_sds, specs = _lm_param_struct(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    cache_shape, cache_dt = lm_cache_shape(cfg, b, s)
+    cache_spec = lm_cache_spec(cfg, mesh.axis_names)
+    cache_sds = _sds(mesh, cache_shape, cache_dt, cache_spec)
+    token_sds = _sds(mesh, (b,), jnp.int32, P(dp))
+    pos_sds = _sds(mesh, (), jnp.int32, P())
+    vocab_tp = "model" if "model" in mesh.axis_names else None
+
+    def step(params, cache, token, pos):
+        return lm_decode_step(params, cache, token, pos, cfg)
+
+    fn = jax.jit(
+        step,
+        out_shardings=(_ns(mesh, P(dp, vocab_tp)), _ns(mesh, cache_spec)),
+        donate_argnums=(1,),
+    )
+    return fn, (params_sds, cache_sds, token_sds, pos_sds)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_param_struct(cfg: GNNConfig, mesh: Mesh, d_feat: int, n_classes: int):
+    shapes = jax.eval_shape(
+        functools.partial(init_gat_params, cfg=cfg, d_feat=d_feat, n_classes=n_classes),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    specs = jax.tree.map(lambda _: P(), shapes)  # GAT params are tiny → replicated
+    return _shaped_tree(mesh, shapes, specs), specs
+
+
+def _gnn_full_cell(cfg: GNNConfig, shape: GNNShape, mesh: Mesh):
+    dp = _dp(mesh.axis_names)
+    cfg = dataclasses.replace(cfg, act_dp=dp)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    params_sds, specs = _gnn_param_struct(cfg, mesh, shape.d_feat, shape.n_classes)
+    opt_shapes = jax.eval_shape(init_adamw, params_sds)
+    opt_specs = type(opt_shapes)(m=specs, v=specs, step=P())
+    opt_sds = _shaped_tree(mesh, opt_shapes, opt_specs)
+    e_pad = _round_up(shape.n_edges, 512 * max(1, _dp_size(mesh)))
+    batch_sds = {
+        "feats": _sds(mesh, (shape.n_nodes, shape.d_feat), jnp.float32, P(None, None)),
+        "src": _sds(mesh, (e_pad,), jnp.int32, P(dp)),
+        "dst": _sds(mesh, (e_pad,), jnp.int32, P(dp)),
+        "labels": _sds(mesh, (shape.n_nodes,), jnp.int32, P(None)),
+        "mask": _sds(mesh, (shape.n_nodes,), jnp.float32, P(None)),
+    }
+    step = make_gnn_train_step(cfg, n_classes=shape.n_classes)
+    metric_shapes = jax.eval_shape(step, params_sds, opt_sds, batch_sds)[2]
+    out_shardings = (
+        _ns_tree(mesh, specs),
+        _ns_tree(mesh, opt_specs),
+        jax.tree.map(lambda _: _ns(mesh, P()), metric_shapes),
+    )
+    fn = jax.jit(step, out_shardings=out_shardings, donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, batch_sds)
+
+
+def _gnn_minibatch_cell(cfg: GNNConfig, shape: GNNShape, mesh: Mesh):
+    dp = _dp(mesh.axis_names)
+    cfg = dataclasses.replace(cfg, act_dp=dp)
+    b = shape.batch_nodes
+    f1, f2 = shape.fanout
+    max_nodes = b * (1 + f1 + f1 * f2)
+    max_edges = _round_up(b * f1 + b * f1 * f2, 512 * max(1, _dp_size(mesh)))
+    params_sds, specs = _gnn_param_struct(cfg, mesh, shape.d_feat, shape.n_classes)
+    opt_shapes = jax.eval_shape(init_adamw, params_sds)
+    opt_specs = type(opt_shapes)(m=specs, v=specs, step=P())
+    opt_sds = _shaped_tree(mesh, opt_shapes, opt_specs)
+    batch_sds = {
+        "feats": _sds(mesh, (max_nodes, shape.d_feat), jnp.float32, P(None, None)),
+        "src": _sds(mesh, (max_edges,), jnp.int32, P(dp)),
+        "dst": _sds(mesh, (max_edges,), jnp.int32, P(dp)),
+        "labels": _sds(mesh, (max_nodes,), jnp.int32, P(None)),
+        "mask": _sds(mesh, (max_nodes,), jnp.float32, P(None)),
+    }
+    step = make_gnn_train_step(cfg, n_classes=shape.n_classes)
+    metric_shapes = jax.eval_shape(step, params_sds, opt_sds, batch_sds)[2]
+    out_shardings = (
+        _ns_tree(mesh, specs),
+        _ns_tree(mesh, opt_specs),
+        jax.tree.map(lambda _: _ns(mesh, P()), metric_shapes),
+    )
+    fn = jax.jit(step, out_shardings=out_shardings, donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, batch_sds)
+
+
+def _gnn_molecule_cell(cfg: GNNConfig, shape: GNNShape, mesh: Mesh):
+    dp = _dp(mesh.axis_names)
+    g = _round_up(shape.n_graphs, max(1, _dp_size(mesh)))
+    params_sds, specs = _gnn_param_struct(cfg, mesh, shape.d_feat, shape.n_classes)
+    opt_shapes = jax.eval_shape(init_adamw, params_sds)
+    opt_specs = type(opt_shapes)(m=specs, v=specs, step=P())
+    opt_sds = _shaped_tree(mesh, opt_shapes, opt_specs)
+    batch_sds = {
+        "feats": _sds(mesh, (g, shape.n_nodes, shape.d_feat), jnp.float32, P(dp, None, None)),
+        "src": _sds(mesh, (g, shape.n_edges), jnp.int32, P(dp, None)),
+        "dst": _sds(mesh, (g, shape.n_edges), jnp.int32, P(dp, None)),
+        "labels": _sds(mesh, (g,), jnp.int32, P(dp)),
+    }
+    step = make_gnn_batched_train_step(cfg, n_classes=shape.n_classes)
+    metric_shapes = jax.eval_shape(step, params_sds, opt_sds, batch_sds)[2]
+    out_shardings = (
+        _ns_tree(mesh, specs),
+        _ns_tree(mesh, opt_specs),
+        jax.tree.map(lambda _: _ns(mesh, P()), metric_shapes),
+    )
+    fn = jax.jit(step, out_shardings=out_shardings, donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, batch_sds)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_param_struct(cfg: RecsysConfig, mesh: Mesh):
+    """Param SDS with the stacked tables padded to divide the model axis."""
+    tp = mesh.shape.get("model", 1)
+    pad_to = 128 * tp
+
+    shapes = jax.eval_shape(
+        functools.partial(init_recsys_params, cfg=cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+    def pad_rows(s):
+        return jax.ShapeDtypeStruct((_round_up(s.shape[0], pad_to),) + s.shape[1:], s.dtype)
+
+    shapes = dict(shapes)
+    for key in ("table", "linear", "item_table"):
+        if key in shapes:
+            shapes[key] = pad_rows(shapes[key])
+
+    specs = {k: jax.tree.map(lambda _: P(), v) for k, v in shapes.items()}
+    for key in ("table", "linear", "item_table"):
+        if key in shapes:
+            specs[key] = P("model", None) if "model" in mesh.axis_names else P(None, None)
+    return _shaped_tree(mesh, shapes, specs), specs
+
+
+def _recsys_lookup(mesh: Mesh):
+    if "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        return emb_mod.make_sharded_lookup(mesh)
+    return None
+
+
+def _recsys_train_cell(cfg: RecsysConfig, shape: RecsysShape, mesh: Mesh):
+    dp = _dp(mesh.axis_names)
+    params_sds, specs = _recsys_param_struct(cfg, mesh)
+    opt_shapes = jax.eval_shape(init_adamw, params_sds)
+    opt_specs = type(opt_shapes)(m=specs, v=specs, step=P())
+    opt_sds = _shaped_tree(mesh, opt_shapes, opt_specs)
+    b = shape.batch
+    batch_sds = {
+        "sparse": _sds(mesh, (b, cfg.n_sparse), jnp.int32, P(dp, None)),
+        "dense": _sds(mesh, (b, cfg.n_dense), jnp.float32, P(dp, None)),
+    }
+    if cfg.model == "two_tower":
+        batch_sds["item_ids"] = _sds(mesh, (b,), jnp.int32, P(dp))
+    else:
+        batch_sds["labels"] = _sds(mesh, (b,), jnp.int32, P(dp))
+    step = make_recsys_train_step(cfg, lookup=_recsys_lookup(mesh))
+    metric_shapes = jax.eval_shape(step, params_sds, opt_sds, batch_sds)[2]
+    out_shardings = (
+        _ns_tree(mesh, specs),
+        _ns_tree(mesh, opt_specs),
+        jax.tree.map(lambda _: _ns(mesh, P()), metric_shapes),
+    )
+    fn = jax.jit(step, out_shardings=out_shardings, donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, batch_sds)
+
+
+def _recsys_serve_cell(cfg: RecsysConfig, shape: RecsysShape, mesh: Mesh):
+    dp = _dp(mesh.axis_names)
+    params_sds, specs = _recsys_param_struct(cfg, mesh)
+    b = shape.batch
+    sparse = _sds(mesh, (b, cfg.n_sparse), jnp.int32, P(dp, None))
+    dense = _sds(mesh, (b, cfg.n_dense), jnp.float32, P(dp, None))
+    lookup = _recsys_lookup(mesh)
+
+    if cfg.model == "two_tower":
+
+        def step(params, sparse, dense):
+            return two_tower_embed(params, cfg, sparse, dense, lookup=lookup)
+
+        fn = jax.jit(step, out_shardings=_ns(mesh, P(dp, None)))
+    else:
+
+        def step(params, sparse, dense):
+            return jax.nn.sigmoid(
+                recsys_logits(params, cfg, sparse, dense, lookup=lookup)
+            )
+
+        fn = jax.jit(step, out_shardings=_ns(mesh, P(dp)))
+    return fn, (params_sds, sparse, dense)
+
+
+def _recsys_retrieval_cell(cfg: RecsysConfig, shape: RecsysShape, mesh: Mesh):
+    dp = _dp(mesh.axis_names)
+    params_sds, specs = _recsys_param_struct(cfg, mesh)
+    n_cand = shape.n_candidates
+
+    if cfg.model == "two_tower":
+        # one query embedding vs a (model-sharded) candidate matrix + top-k
+        b = max(shape.batch, 1)
+        d_out = (cfg.tower_mlp or (cfg.embed_dim,))[-1]
+        sparse = _sds(mesh, (b, cfg.n_sparse), jnp.int32, P(None, None))
+        dense = _sds(mesh, (b, cfg.n_dense), jnp.float32, P(None, None))
+        cand = _sds(
+            mesh, (n_cand, d_out), jnp.float32,
+            P("model" if "model" in mesh.axis_names else None, None),
+        )
+        # batch-1 query: replicated plain gather (the shard_map lookup
+        # needs a dp-divisible batch)
+        def step(params, sparse, dense, cand):
+            q = two_tower_embed(params, cfg, sparse, dense, lookup=None)
+            return retrieval_scores(q, cand, k=100)
+
+        fn = jax.jit(
+            step, out_shardings=(_ns(mesh, P(None, None)), _ns(mesh, P(None, None)))
+        )
+        return fn, (params_sds, sparse, dense, cand)
+
+    # CTR models: score the single query against 1M candidate rows — the
+    # candidate item id varies per row, so this is a batch=n_cand forward
+    # (vectorized, never a python loop) + top-k of the logits.  The forward
+    # is chunked over rows with lax.map: xDeepFM's CIN materializes a
+    # (rows, H_k·F, D) tensor per layer, which at 1M rows is 19 GiB/chip —
+    # chunking bounds the live set at (chunk, H_k·F, D) (§Perf).
+    sparse = _sds(mesh, (n_cand, cfg.n_sparse), jnp.int32, P(dp, None))
+    dense = _sds(mesh, (n_cand, cfg.n_dense), jnp.float32, P(dp, None))
+    lookup = _recsys_lookup(mesh)
+    # chunk must divide n_cand and be divisible by the dp degree;
+    # 40,000 = 2^6·5^4 divides 10^6 and both 16- and 32-way dp
+    chunk = 40_000 if (n_cand % 40_000 == 0 and 40_000 % max(1, _dp_size(mesh)) == 0) else n_cand
+
+    def step(params, sparse, dense):
+        nc = sparse.shape[0] // chunk
+
+        def one(args):
+            # keep each chunk's rows spread over the batch axes — GSPMD
+            # loses the dim-1 sharding through the reshape+scan otherwise
+            sp = jax.lax.with_sharding_constraint(args[0], P(dp, None))
+            de = jax.lax.with_sharding_constraint(args[1], P(dp, None))
+            return recsys_logits(params, cfg, sp, de, lookup=lookup)
+
+        sc = sparse.reshape(nc, chunk, cfg.n_sparse)
+        dc = dense.reshape(nc, chunk, cfg.n_dense)
+        logits = jax.lax.map(one, (sc, dc)).reshape(-1)
+        vals, idx = jax.lax.top_k(logits, 100)
+        return vals, idx.astype(jnp.int32)
+
+    fn = jax.jit(step, out_shardings=(_ns(mesh, P(None)), _ns(mesh, P(None))))
+    return fn, (params_sds, sparse, dense)
+
+
+# ---------------------------------------------------------------------------
+# SOGAIC cells (the paper's own pipeline stages)
+# ---------------------------------------------------------------------------
+
+
+def _sogaic_cell(cfg: SogaicCellConfig, shape_name: str, mesh: Mesh):
+    from repro.distributed import steps as dsteps
+
+    dp = _dp(mesh.axis_names)
+    fa = tuple(mesh.axis_names)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    d = cfg.dim
+
+    if shape_name == "assign":
+        fn, _ = dsteps.make_assign_step(
+            mesh, omega=cfg.omega, gamma=cfg.gamma, eps=cfg.eps, k_cand=cfg.k_cand
+        )
+        args = (
+            _sds(mesh, (cfg.chunk_b, d), jnp.float32, P(dp, None)),
+            _sds(mesh, (cfg.phi, d), jnp.float32, P("model", None)),
+            _sds(mesh, (cfg.phi,), jnp.int32, P()),
+        )
+        return fn, args
+    if shape_name == "knn":
+        fn, _ = dsteps.make_knn_step(mesh, k=cfg.knn_k)
+        args = (
+            _sds(mesh, (cfg.chunk_b // 4, d), jnp.float32, P(dp, None)),
+            _sds(mesh, (cfg.gamma, d), jnp.float32, P("model", None)),
+        )
+        return fn, args
+    if shape_name == "build":
+        fn, _ = dsteps.make_build_step(mesh, r=cfg.r, knn_k=cfg.knn_k)
+        args = (
+            _sds(mesh, (n_dev, cfg.build_subset, d), jnp.float32, P(fa, None, None)),
+            _sds(mesh, (n_dev,), jnp.int32, P(fa)),
+        )
+        return fn, args
+    if shape_name == "merge":
+        fn, _ = dsteps.make_merge_step(mesh, r=cfg.r)
+        t = _round_up(cfg.merge_nodes // 8, n_dev)
+        args = (
+            _sds(mesh, (cfg.merge_nodes, d), jnp.float32, P(None, None)),
+            _sds(mesh, (t,), jnp.int32, P(fa)),
+            _sds(mesh, (t, 2 * cfg.r), jnp.int32, P(fa, None)),
+        )
+        return fn, args
+    if shape_name == "pq_encode":
+        fn, _ = dsteps.make_pq_encode_step(mesh)
+        dsub = d // cfg.pq_m
+        args = (
+            _sds(mesh, (cfg.chunk_b, d), jnp.float32, P(dp, None)),
+            _sds(mesh, (cfg.pq_m, cfg.pq_codes, dsub), jnp.float32, P(None, None, None)),
+        )
+        return fn, args
+    raise KeyError(shape_name)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def list_cells(arch_id: str) -> list[CellInfo]:
+    cfg = get_config(arch_id)
+    if cfg.family == "lm":
+        return [
+            CellInfo(arch_id, s.name, s.kind, s.skip_reason) for s in cfg.shapes
+        ]
+    if cfg.family == "gnn":
+        return [CellInfo(arch_id, s.name, s.kind) for s in cfg.shapes]
+    if cfg.family == "recsys":
+        return [CellInfo(arch_id, s.name, s.kind) for s in cfg.shapes]
+    if cfg.family == "sogaic":
+        return [CellInfo(arch_id, s, "pipeline") for s in cfg.shapes]
+    raise KeyError(cfg.family)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh):
+    """Returns (fn, args) for the cell — fn is jitted with shardings."""
+    cfg = get_config(arch_id)
+    if cfg.family == "lm":
+        shape = next(s for s in cfg.shapes if s.name == shape_name)
+        if shape.skip_reason:
+            raise ValueError(f"cell skipped: {shape.skip_reason}")
+        if shape.kind == "train":
+            return _lm_train_cell(cfg, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(cfg, shape, mesh)
+        return _lm_decode_cell(cfg, shape, mesh)
+    if cfg.family == "gnn":
+        shape = next(s for s in cfg.shapes if s.name == shape_name)
+        if shape.kind == "full_graph":
+            return _gnn_full_cell(cfg, shape, mesh)
+        if shape.kind == "minibatch":
+            return _gnn_minibatch_cell(cfg, shape, mesh)
+        return _gnn_molecule_cell(cfg, shape, mesh)
+    if cfg.family == "recsys":
+        shape = next(s for s in cfg.shapes if s.name == shape_name)
+        if shape.kind == "train":
+            return _recsys_train_cell(cfg, shape, mesh)
+        if shape.kind == "serve":
+            return _recsys_serve_cell(cfg, shape, mesh)
+        return _recsys_retrieval_cell(cfg, shape, mesh)
+    if cfg.family == "sogaic":
+        return _sogaic_cell(cfg, shape_name, mesh)
+    raise KeyError(cfg.family)

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# developer override (still before any jax import): smaller device counts
+# make single-cell iteration faster; the deliverable runs use 512.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes and record memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepfm   # one arch
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi \
+        --arch deepseek-v2-236b --shape train_4k                 # one cell
+
+Results append to ``benchmarks/results/dryrun_<mesh>.jsonl`` (one JSON per
+cell) — EXPERIMENTS.md §Dry-run / §Roofline are generated from these.
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str) -> dict:
+    import jax
+
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import roofline_from_compiled
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = math.prod(mesh.shape.values())
+    rec: dict = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build_cell(arch_id, shape_name, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            print(compiled.memory_analysis())
+            print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+                   if k in ("flops", "bytes accessed")})
+            rec.update(roofline_from_compiled(compiled, n_chips))
+            rec["t_lower_s"] = round(t_lower, 2)
+            rec["t_compile_s"] = round(t_compile, 2)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    from repro.configs import list_archs
+    from repro.launch.cells import list_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape cell (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_err = n_skip = 0
+    for mesh_kind in meshes:
+        out_path = os.path.join(args.out, f"dryrun_{mesh_kind}.jsonl")
+        done = set()
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                for line in f:
+                    try:
+                        r = json.loads(line)
+                        if r.get("status") == "ok":
+                            done.add((r["arch"], r["shape"]))
+                    except json.JSONDecodeError:
+                        pass
+        with open(out_path, "a") as out:
+            for arch in archs:
+                for cell in list_cells(arch):
+                    if args.shape and cell.shape_name != args.shape:
+                        continue
+                    if cell.skip_reason:
+                        rec = {
+                            "arch": arch, "shape": cell.shape_name,
+                            "mesh": mesh_kind, "status": "skipped",
+                            "skip_reason": cell.skip_reason,
+                        }
+                        out.write(json.dumps(rec) + "\n")
+                        out.flush()
+                        n_skip += 1
+                        print(f"[{mesh_kind}] {arch}/{cell.shape_name}: SKIP")
+                        continue
+                    if (arch, cell.shape_name) in done and not args.shape:
+                        print(f"[{mesh_kind}] {arch}/{cell.shape_name}: cached")
+                        continue
+                    print(f"[{mesh_kind}] {arch}/{cell.shape_name}: lowering...")
+                    rec = run_cell(arch, cell.shape_name, mesh_kind)
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+                    if rec["status"] == "ok":
+                        n_ok += 1
+                        print(
+                            f"[{mesh_kind}] {arch}/{cell.shape_name}: OK "
+                            f"bottleneck={rec['bottleneck']} "
+                            f"hbm={rec['peak_hbm_bytes']/2**30:.2f}GiB "
+                            f"fits={rec['fits_hbm']} "
+                            f"(lower {rec['t_lower_s']}s compile {rec['t_compile_s']}s)"
+                        )
+                    else:
+                        n_err += 1
+                        print(f"[{mesh_kind}] {arch}/{cell.shape_name}: ERROR {rec['error']}")
+    print(f"\ndry-run complete: {n_ok} ok, {n_err} errors, {n_skip} skipped")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

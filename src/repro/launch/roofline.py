@@ -1,0 +1,134 @@
+"""Roofline term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), for TPU v5e constants:
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16 per chip)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s per chip)
+  collective = collective_bytes / link_bw        (~50 GB/s per ICI link)
+
+``cost_analysis()`` reports per-device FLOPs/bytes on the post-SPMD
+module, so terms are per-chip step latencies directly.  Collective bytes
+are not in cost_analysis — we parse the post-partitioning HLO and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (per-device shapes →
+per-device wire bytes; the convention is recorded in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+__all__ = [
+    "V5E",
+    "parse_collectives",
+    "roofline_from_compiled",
+    "model_flops_dense",
+]
+
+V5E = {
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "link_bw": 50e9,  # bytes/s per ICI link (per direction)
+    "hbm_bytes": 16 * 1024**3,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Sum result-shape bytes + instruction count per collective kind."""
+    out: dict[str, dict[str, float]] = {
+        k: {"bytes": 0, "count": 0} for k in _COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            # matches "  %name = TYPE all-gather(" and fusion-free forms;
+            # "-start" variants counted once (skip the "-done" halves)
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                lhs = line.split("=", 1)
+                segment = lhs[1].split("(", 1)[0] if len(lhs) == 2 else line
+                out[kind]["bytes"] += _shape_bytes(segment)
+                out[kind]["count"] += 1
+                break
+    return out
+
+
+def roofline_from_compiled(compiled, n_chips: int, hw: dict = V5E) -> dict[str, Any]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+
+    mem = compiled.memory_analysis()
+    mem_per_device = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+    }
+    peak_hbm = (
+        mem_per_device["argument_bytes"]
+        + mem_per_device["output_bytes"]
+        + mem_per_device["temp_bytes"]
+        - mem_per_device["alias_bytes"]
+    )
+
+    t_compute = flops / hw["peak_flops"]
+    t_memory = bytes_accessed / hw["hbm_bw"]
+    t_collective = coll_bytes / hw["link_bw"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    return {
+        "n_chips": n_chips,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": bottleneck,
+        "roofline_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            t_compute / max(max(terms.values()), 1e-30)
+        ),  # fraction of the step the MXU is the binding constraint
+        "memory_per_device": mem_per_device,
+        "peak_hbm_bytes": peak_hbm,
+        "fits_hbm": bool(peak_hbm <= hw["hbm_bytes"]),
+    }
+
+
+def model_flops_dense(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per the assignment."""
+    return 6.0 * n_params_active * tokens

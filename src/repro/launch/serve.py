@@ -1,0 +1,59 @@
+"""Serving launcher — batched ANN queries over a built SOGAIC index.
+
+    PYTHONPATH=src python -m repro.launch.serve --ckpt /tmp/sogaic_ckpt \
+        --batches 10 --batch-size 64 --beam 64
+
+Loads the index from a build checkpoint and runs batched beam-search
+request waves, reporting latency percentiles and recall (when ground
+truth is computable at the loaded scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", required=True)
+    ap.add_argument("--batches", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--beam", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.pipeline import SOGAICIndex
+    from repro.core.search import brute_force_topk, recall_at_k
+
+    index = SOGAICIndex.load(CheckpointManager(args.ckpt))
+    n, d = index.x.shape
+    rng = np.random.default_rng(1)
+    lat = []
+    recalls = []
+    for b in range(args.batches):
+        q = index.x[rng.choice(n, args.batch_size)] + rng.normal(
+            0, 0.05, (args.batch_size, d)
+        ).astype(np.float32)
+        t0 = time.perf_counter()
+        ids, dists = index.search(q, args.k, beam_l=args.beam)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        if n <= 100_000:
+            _, gt = brute_force_topk(jnp.asarray(index.x), jnp.asarray(q), args.k)
+            recalls.append(recall_at_k(ids, np.asarray(gt)))
+    lat = np.array(lat[1:])  # drop compile
+    print(
+        f"batches={args.batches} bs={args.batch_size} "
+        f"p50={np.percentile(lat, 50):.1f}ms p99={np.percentile(lat, 99):.1f}ms "
+        f"qps={args.batch_size / (lat.mean() / 1e3):.0f}"
+        + (f" recall@{args.k}={np.mean(recalls):.4f}" if recalls else "")
+    )
+
+
+if __name__ == "__main__":
+    main()

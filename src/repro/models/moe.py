@@ -1,0 +1,125 @@
+"""Top-k routed mixture-of-experts FFN with per-data-shard dispatch.
+
+Sort-based (dropping) dispatch, DeepSeek-style routing (softmax → top-k →
+renormalize), shared experts fused as one dense SwiGLU branch.
+
+Sharding story (DESIGN.md §4): tokens are reshaped to (DP, T_loc, D) where
+DP is the size of the batch-parallel mesh axes, so dispatch stays *local to
+each data shard* — the (DP, E, C, D) buffer shards DP over (pod, data) and
+E over ``model`` (expert parallelism).  With a global dispatch the buffer
+would be ~80 TB for the 236B config; per-shard it is ~160 MB/device.
+Capacity C = ceil(T_loc·k/E · capacity_factor); overflow tokens drop (their
+residual path passes through — standard dropping MoE semantics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import constrain, swiglu
+
+__all__ = ["moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(t_loc: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(t_loc * top_k / n_experts * factor) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def _group_rank(sorted_keys: jax.Array) -> jax.Array:
+    """Rank of each element within its contiguous group (sorted input)."""
+    n = sorted_keys.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    group_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    return pos - group_start
+
+
+def _dispatch_one_shard(x, gates, eidx, n_experts: int, capacity: int):
+    """x (T, D); gates (T, k); eidx (T, k) int32 → (buf (E, C, D), slot (T, k)).
+
+    slot = flattened buffer position for each (token, choice), -1 if dropped.
+    """
+    t, d = x.shape
+    k = eidx.shape[1]
+    e_flat = eidx.reshape(-1)  # (T·k,)
+    order = jnp.argsort(e_flat, stable=True)
+    ranks = _group_rank(e_flat[order])
+    # scatter ranks back to (T·k,) order
+    rank_flat = jnp.zeros_like(e_flat).at[order].set(ranks)
+    keep = rank_flat < capacity
+    slot = jnp.where(keep, e_flat * capacity + rank_flat, -1).reshape(t, k)
+
+    # Scatter one routing slot at a time: no (T·k, D) tensor (nor the u32
+    # index broadcast in its backward) ever materializes — only (T, D)
+    # views of x.
+    buf = jnp.zeros((n_experts * capacity, d), x.dtype)
+    for ki in range(k):
+        sl_k = slot[:, ki]
+        # .add (slots are unique) — the backward of scatter-add is a plain
+        # gather; scatter-set's backward materializes (E·C, D) masks
+        buf = buf.at[jnp.where(sl_k >= 0, sl_k, n_experts * capacity)].add(
+            x, mode="drop"
+        )
+    return buf.reshape(n_experts, capacity, d), slot
+
+
+def moe_ffn(x, lp, moe, *, dp_size: int = 1, cfg=None):
+    """MoE FFN.  x (B, S, D) → (out (B, S, D), aux_loss scalar).
+
+    ``lp``: router (D, E); we_gate/we_up (E, D, F); we_down (E, F, D);
+    optional shared ws_gate/ws_up (D, Fs), ws_down (Fs, D).
+    ``dp_size``: number of batch-parallel shards — dispatch is local per
+    shard (see module docstring).
+    """
+    b, s, d = x.shape
+    e, kk = moe.n_experts, moe.top_k
+    t_total = b * s
+    assert t_total % dp_size == 0, (t_total, dp_size)
+    t_loc = t_total // dp_size
+    cap = moe_capacity(t_loc, e, kk, moe.capacity_factor)
+
+    xf = x.reshape(dp_size, t_loc, d)
+    xf = constrain(xf, cfg, "dp", None, None) if cfg is not None else xf
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), lp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (DP, T, E)
+    gates, eidx = jax.lax.top_k(probs, kk)  # (DP, T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    eidx = eidx.astype(jnp.int32)
+
+    # Switch-style load-balance aux loss (computed over all shards).
+    me = probs.mean(axis=(0, 1))  # (E,) mean router prob
+    one_hot_top1 = jax.nn.one_hot(eidx[..., 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))  # (E,) top-1 load fraction
+    aux = moe.aux_coef * e * jnp.sum(me * ce)
+
+    buf, slot = jax.vmap(
+        lambda xs, gs, es: _dispatch_one_shard(xs, gs, es, e, cap)
+    )(xf, gates, eidx)  # buf (DP, E, C, D); slot (DP, T, k)
+    if cfg is not None:
+        buf = constrain(buf, cfg, "dp", "tp", None, None)
+
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, lp["we_gate"])
+    h_up = jnp.einsum("gecd,edf->gecf", buf, lp["we_up"])
+    h = swiglu(h_gate, h_up)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, lp["we_down"])  # (DP, E, C, D)
+    if cfg is not None:
+        out_buf = constrain(out_buf, cfg, "dp", "tp", None, None)
+
+    flat = out_buf.reshape(dp_size, e * cap, d)
+    # combine one routing slot at a time — only (DP, T, D) live tensors
+    out = jnp.zeros((dp_size, t_loc, d), flat.dtype)
+    for ki in range(kk):
+        sl_k = slot[:, :, ki]  # (DP, T)
+        g = jax.vmap(lambda f, sl: jnp.take(f, jnp.maximum(sl, 0), axis=0))(flat, sl_k)
+        g = jnp.where((sl_k >= 0)[..., None], g, 0.0)
+        out = out + g * gates[:, :, ki][..., None].astype(g.dtype)
+
+    if "ws_gate" in lp:
+        shared = swiglu(xf @ lp["ws_gate"], xf @ lp["ws_up"]) @ lp["ws_down"]
+        out = out + shared
+
+    return out.reshape(b, s, d).astype(x.dtype), aux

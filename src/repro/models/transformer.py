@@ -1,0 +1,404 @@
+"""Config-driven transformer LM: dense/GQA, MLA, MoE — train/prefill/decode.
+
+Layer stacking via ``lax.scan`` over (L, ...)-stacked params (one compiled
+layer body regardless of depth; optional ``jax.checkpoint`` remat).  All
+functions are pure; sharding is carried by the PartitionSpec pytrees from
+:func:`lm_param_specs` / :func:`lm_cache_specs` and applied by the
+launcher's jit in/out shardings (GSPMD propagates through the scan).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models.attention import (
+    gqa_attention,
+    gqa_decode,
+    mla_attention,
+    mla_decode,
+)
+from repro.models.layers import constrain, dense_init, rms_norm, rope_freqs, swiglu
+from repro.models.moe import moe_ffn
+
+__all__ = [
+    "init_lm_params",
+    "lm_hidden",
+    "lm_param_specs",
+    "lm_cache_shape",
+    "lm_cache_spec",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+]
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _rope_dim(cfg: LMConfig) -> int:
+    return cfg.qk_rope_dim if cfg.attn == "mla" else cfg.d_head
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_lm_params(key: jax.Array, cfg: LMConfig) -> dict:
+    l, d, h, kv, dh = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = _dtype(cfg)
+    keys = iter(jax.random.split(key, 64))
+
+    layers: dict[str, jax.Array] = {
+        "attn_norm": jnp.ones((l, d), dt),
+        "ffn_norm": jnp.ones((l, d), dt),
+    }
+    if cfg.attn == "mla":
+        nope, rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        lora = cfg.mla_kv_lora
+        if cfg.mla_q_lora:
+            layers["wq_a"] = dense_init(next(keys), (l, d, cfg.mla_q_lora), dtype=dt)
+            layers["q_norm"] = jnp.ones((l, cfg.mla_q_lora), dt)
+            layers["wq_b"] = dense_init(
+                next(keys), (l, cfg.mla_q_lora, h * (nope + rope)), dtype=dt
+            )
+        else:
+            layers["wq"] = dense_init(next(keys), (l, d, h * (nope + rope)), dtype=dt)
+        layers["wkv_a"] = dense_init(next(keys), (l, d, lora + rope), dtype=dt)
+        layers["kv_norm"] = jnp.ones((l, lora), dt)
+        layers["wkv_b"] = dense_init(next(keys), (l, lora, h * (nope + dv)), dtype=dt)
+        layers["wo"] = dense_init(next(keys), (l, h * dv, d), dtype=dt)
+    else:
+        layers["wq"] = dense_init(next(keys), (l, d, h * dh), dtype=dt)
+        layers["wk"] = dense_init(next(keys), (l, d, kv * dh), dtype=dt)
+        layers["wv"] = dense_init(next(keys), (l, d, kv * dh), dtype=dt)
+        layers["wo"] = dense_init(next(keys), (l, h * dh, d), dtype=dt)
+
+    if cfg.moe is not None:
+        e, fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        layers["router"] = dense_init(next(keys), (l, d, e), dtype=jnp.float32)
+        layers["we_gate"] = dense_init(next(keys), (l, e, d, fe), dtype=dt)
+        layers["we_up"] = dense_init(next(keys), (l, e, d, fe), dtype=dt)
+        layers["we_down"] = dense_init(next(keys), (l, e, fe, d), dtype=dt)
+        if cfg.moe.n_shared:
+            fs = cfg.moe.n_shared * fe
+            layers["ws_gate"] = dense_init(next(keys), (l, d, fs), dtype=dt)
+            layers["ws_up"] = dense_init(next(keys), (l, d, fs), dtype=dt)
+            layers["ws_down"] = dense_init(next(keys), (l, fs, d), dtype=dt)
+    else:
+        layers["w_gate"] = dense_init(next(keys), (l, d, cfg.d_ff), dtype=dt)
+        layers["w_up"] = dense_init(next(keys), (l, d, cfg.d_ff), dtype=dt)
+        layers["w_down"] = dense_init(next(keys), (l, cfg.d_ff, d), dtype=dt)
+
+    return {
+        "embed": dense_init(next(keys), (cfg.vocab, d), scale=0.02, dtype=dt),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": dense_init(next(keys), (d, cfg.vocab), dtype=dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+
+def lm_param_specs(cfg: LMConfig, mesh_axes: tuple[str, ...]) -> dict:
+    """PartitionSpec pytree matching init_lm_params.
+
+    TP over 'model' where dims divide; FSDP (ZeRO-3-style) over the batch
+    axes ('pod','data') on a complementary dim.  Attention projections fall
+    back to FSDP-only when head counts don't divide TP (llama3.2/smollm).
+    """
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    tp = "model" if "model" in mesh_axes else None
+    # guard: without a model axis everything TP-ish becomes None
+    l = cfg.n_layers
+
+    def p(*specs):
+        return P(*specs)
+
+    # divisibility checks are done by the launcher (mesh shape known there);
+    # here we encode the *rule*: a dim gets 'model' only if the config's
+    # head counts allow it for every supported mesh (16-way TP).
+    heads_ok = cfg.n_heads % 16 == 0 and (
+        cfg.attn == "mla" or cfg.n_kv_heads % 16 == 0
+    )
+    atp = tp if heads_ok else None
+
+    layers: dict[str, Any] = {
+        "attn_norm": p(None, None),
+        "ffn_norm": p(None, None),
+    }
+    if cfg.attn == "mla":
+        if cfg.mla_q_lora:
+            layers["wq_a"] = p(None, fsdp, None)
+            layers["q_norm"] = p(None, None)
+            layers["wq_b"] = p(None, None, atp)
+        else:
+            layers["wq"] = p(None, fsdp, atp)
+        layers["wkv_a"] = p(None, fsdp, None)
+        layers["kv_norm"] = p(None, None)
+        layers["wkv_b"] = p(None, None, atp)
+        layers["wo"] = p(None, atp, fsdp)
+    else:
+        layers["wq"] = p(None, fsdp, atp)
+        layers["wk"] = p(None, fsdp, atp)
+        layers["wv"] = p(None, fsdp, atp)
+        layers["wo"] = p(None, atp, fsdp)
+
+    if cfg.moe is not None:
+        layers["router"] = p(None, fsdp, None)
+        layers["we_gate"] = p(None, tp, fsdp, None)
+        layers["we_up"] = p(None, tp, fsdp, None)
+        layers["we_down"] = p(None, tp, None, fsdp)
+        if cfg.moe.n_shared:
+            layers["ws_gate"] = p(None, fsdp, tp)
+            layers["ws_up"] = p(None, fsdp, tp)
+            layers["ws_down"] = p(None, tp, fsdp)
+    else:
+        layers["w_gate"] = p(None, fsdp, tp)
+        layers["w_up"] = p(None, fsdp, tp)
+        layers["w_down"] = p(None, tp, fsdp)
+
+    return {
+        "embed": p(tp, None),
+        "layers": layers,
+        "final_norm": p(None),
+        "lm_head": p(fsdp, tp),
+    }
+
+
+def lm_cache_shape(cfg: LMConfig, batch: int, smax: int) -> tuple[tuple[int, ...], Any]:
+    dt = _dtype(cfg)
+    if cfg.attn == "mla":
+        return (cfg.n_layers, batch, smax, cfg.mla_kv_lora + cfg.qk_rope_dim), dt
+    # gqa: k and v stacked on a leading axis of size 2
+    return (2, cfg.n_layers, batch, smax, cfg.n_kv_heads, cfg.d_head), dt
+
+
+def lm_cache_spec(cfg: LMConfig, mesh_axes: tuple[str, ...]) -> P:
+    """KV-cache layout.
+
+    GQA with TP-divisible heads: shard KV heads over 'model'.  Otherwise —
+    and for MLA's latent cache (no head dim) — shard the *sequence* dim
+    over 'model' (flash-decoding-style split-KV: per-shard partial scores,
+    softmax stats reduced across shards by GSPMD).  Without this a 32k
+    cache replicates 16× and no decode cell fits a 16 GB chip.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    tp = "model" if "model" in mesh_axes else None
+    if cfg.attn == "mla":
+        return P(None, dp, tp, None)  # (L, B, S, lora+rope): S over model
+    kv_ok = cfg.n_kv_heads % 16 == 0
+    if kv_ok:
+        return P(None, None, dp, None, tp, None)
+    return P(None, None, dp, tp, None, None)  # (2, L, B, S, KV, dh): S over model
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _layer_fn(cfg: LMConfig, freqs, dp_size: int, collect_cache: bool):
+    def layer(carry, lp):
+        h, aux = carry
+        # barrier: keeps XLA from hoisting the rms_norm f32 cast above the
+        # remat save point (which would store the layer-input stack in f32
+        # — 2× the residual memory)
+        h = jax.lax.optimization_barrier(h)
+        x = rms_norm(h, lp["attn_norm"])
+        if cfg.attn == "mla":
+            attn_out, cache = mla_attention(x, lp, freqs, cfg, chunk=cfg.attn_chunk)
+        else:
+            attn_out, cache = gqa_attention(x, lp, freqs, cfg, chunk=cfg.attn_chunk)
+        sp = "tp" if cfg.seq_parallel else None
+        h = constrain(h + attn_out, cfg, "dp", sp, None)
+        x = rms_norm(h, lp["ffn_norm"])
+        if cfg.moe is not None:
+            ffn_out, l_aux = moe_ffn(x, lp, cfg.moe, dp_size=dp_size, cfg=cfg)
+            aux = aux + l_aux
+        else:
+            hidden = constrain(
+                swiglu(x @ lp["w_gate"], x @ lp["w_up"]), cfg, "dp", None, "tp"
+            )
+            ffn_out = hidden @ lp["w_down"]
+        # sequence-parallel residual stream (Megatron-SP): the layer output
+        # — and therefore the remat-saved per-layer stack — shards its
+        # sequence dim over 'model', cutting residual memory by the TP
+        # degree.  Row-wise ops (norms, FFN, MoE dispatch) are unaffected;
+        # attention projections reshard to head/batch layouts as needed.
+        h = constrain(h + ffn_out, cfg, "dp", sp, None)
+        # only stack per-layer caches when prefill asks for them — an unused
+        # ys stack survives remat+backward as a giant saved residual
+        return (h, aux), (cache if collect_cache else None)
+
+    return layer
+
+
+def lm_forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: LMConfig,
+    *,
+    dp_size: int = 1,
+    collect_cache: bool = False,
+):
+    """tokens (B, S) int32 → (logits (B, S, V) f32, aux, cache-or-None)."""
+    b, s = tokens.shape
+    sp = "tp" if cfg.seq_parallel else None
+    h = constrain(params["embed"][tokens], cfg, "dp", sp, None)  # (B, S, D)
+    freqs = rope_freqs(_rope_dim(cfg), s, theta=cfg.rope_theta)
+    layer = _layer_fn(cfg, freqs, dp_size, collect_cache)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    (h, aux), caches = jax.lax.scan(layer, (h, jnp.float32(0.0)), params["layers"])
+    h = rms_norm(h, params["final_norm"])
+    logits = constrain(
+        (h @ params["lm_head"]).astype(jnp.float32), cfg, "dp", None, "tp"
+    )
+    if collect_cache:
+        return logits, aux, caches
+    return logits, aux, None
+
+
+def lm_hidden(params, tokens, cfg: LMConfig, *, dp_size: int = 1):
+    """Final-norm hidden states (B, S, D) — the loss path uses this with a
+    chunked cross entropy so the (B, S, V) f32 logits never materialize."""
+    b, s = tokens.shape
+    sp = "tp" if cfg.seq_parallel else None
+    h = constrain(params["embed"][tokens], cfg, "dp", sp, None)
+    freqs = rope_freqs(_rope_dim(cfg), s, theta=cfg.rope_theta)
+    layer = _layer_fn(cfg, freqs, dp_size, False)
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    (h, aux), _ = jax.lax.scan(layer, (h, jnp.float32(0.0)), params["layers"])
+    return rms_norm(h, params["final_norm"]), aux
+
+
+def lm_loss(params, tokens, labels, cfg: LMConfig, *, dp_size: int = 1):
+    """Next-token cross entropy, seq-chunked + remat'd.
+
+    The lm_head matmul, logsumexp and gather run per sequence chunk under
+    ``jax.checkpoint`` so the peak live set is (B, chunk, V) instead of
+    (B, S, V) f32 — for the 49k-128k vocabs this is the difference between
+    fitting a 16 GB chip and not (labels -100 → masked).
+    """
+    h, aux = lm_hidden(params, tokens, cfg, dp_size=dp_size)
+    b, s, d = h.shape
+    sc = min(cfg.attn_chunk, s)
+    pad = (-s) % sc
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        s = s + pad
+    nc = s // sc
+    hc = jnp.moveaxis(h.reshape(b, nc, sc, d), 1, 0)  # (nc, B, sc, D)
+    lc = jnp.moveaxis(labels.reshape(b, nc, sc), 1, 0)
+
+    def ce_chunk(args):
+        hi, li = args
+        logits = (hi @ params["lm_head"]).astype(jnp.float32)
+        logits = constrain(logits, cfg, "dp", None, "tp")
+        mask = li >= 0
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        return nll.sum(), mask.sum()
+
+    sums, cnts = jax.lax.map(jax.checkpoint(ce_chunk), (hc, lc))
+    loss = sums.sum() / jnp.maximum(cnts.sum(), 1)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, *, dp_size: int = 1):
+    """Prefill: logits at the last position + the full KV cache."""
+    logits, _, caches = lm_forward(
+        params, tokens, cfg, dp_size=dp_size, collect_cache=True
+    )
+    if cfg.attn == "mla":
+        cache = caches  # (L, B, S, lora+rope)
+    else:
+        k, v = caches  # each (L, B, S, KV, dh)
+        cache = jnp.stack([k, v])  # (2, L, B, S, KV, dh)
+    return logits[:, -1, :], cache
+
+
+def lm_decode_step(params, cache, token, pos, cfg: LMConfig):
+    """One decode step.  token (B,) int32; pos scalar int32.
+
+    cache: (L,B,S,lora+rope) for MLA or (2,L,B,S,KV,dh) for GQA.
+    Returns (logits (B, V) f32, new cache).
+    """
+    b = token.shape[0]
+    h = constrain(params["embed"][token], cfg, "dp", None)  # (B, D)
+    # cache layouts: MLA (L, B, Smax, lora+rope); GQA (2, L, B, Smax, KV, dh)
+    smax = cache.shape[2] if cfg.attn == "mla" else cache.shape[3]
+    # rope table over the full cache length
+    freqs_all = rope_freqs(_rope_dim(cfg), smax, theta=cfg.rope_theta)
+
+    # The cache is threaded as the scan CARRY (updated in place at the layer
+    # index) rather than as xs→ys: the stacked xs/ys formulation makes XLA
+    # hold up to four copies of the multi-GB cache (input stack, loop xs, ys
+    # accumulator, output); the carry form + donation aliases to ~one.
+    l_idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    if cfg.attn == "mla":
+
+        def layer(carry, xs):
+            h, cache_all = carry
+            lp, li = xs
+            cache_l = jax.lax.dynamic_index_in_dim(cache_all, li, 0, keepdims=False)
+            x = rms_norm(h, lp["attn_norm"])
+            attn_out, new_cache_l = mla_decode(x, lp, cache_l, pos, freqs_all, cfg)
+            cache_all = jax.lax.dynamic_update_index_in_dim(
+                cache_all, new_cache_l.astype(cache_all.dtype), li, 0
+            )
+            h = h + attn_out
+            x = rms_norm(h, lp["ffn_norm"])
+            if cfg.moe is not None:
+                ffn_out, _ = moe_ffn(x[:, None, :], lp, cfg.moe, dp_size=1, cfg=cfg)
+                ffn_out = ffn_out[:, 0, :]
+            else:
+                ffn_out = swiglu(x @ lp["w_gate"], x @ lp["w_up"]) @ lp["w_down"]
+            return (constrain(h + ffn_out, cfg, "dp", None), cache_all), None
+
+        (h, new_cache), _ = jax.lax.scan(layer, (h, cache), (params["layers"], l_idx))
+    else:
+
+        def layer(carry, xs):
+            h, cache_all = carry  # (2, L, B, S, KV, dh)
+            lp, li = xs
+            ck = jax.lax.dynamic_index_in_dim(cache_all[0], li, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cache_all[1], li, 0, keepdims=False)
+            x = rms_norm(h, lp["attn_norm"])
+            attn_out, nk, nv = gqa_decode(x, lp, ck, cv, pos, freqs_all, cfg)
+            pair = jnp.stack([nk, nv]).astype(cache_all.dtype)  # (2, B, S, KV, dh)
+            cache_all = jax.lax.dynamic_update_slice(
+                cache_all, pair[:, None], (0, li, 0, 0, 0, 0)
+            )
+            h = h + attn_out
+            x = rms_norm(h, lp["ffn_norm"])
+            if cfg.moe is not None:
+                ffn_out, _ = moe_ffn(x[:, None, :], lp, cfg.moe, dp_size=1, cfg=cfg)
+                ffn_out = ffn_out[:, 0, :]
+            else:
+                ffn_out = swiglu(x @ lp["w_gate"], x @ lp["w_up"]) @ lp["w_down"]
+            return (constrain(h + ffn_out, cfg, "dp", None), cache_all), None
+
+        (h, new_cache), _ = jax.lax.scan(layer, (h, cache), (params["layers"], l_idx))
+
+    h = rms_norm(h, params["final_norm"])
+    logits = constrain(
+        (h @ params["lm_head"]).astype(jnp.float32), cfg, "dp", "tp"
+    )
+    return logits, new_cache

@@ -1,0 +1,16 @@
+"""Training substrate: optimizer, step factories, gradient compression."""
+
+from repro.training.optimizer import adamw_update, init_adamw
+from repro.training.train_loop import (
+    make_gnn_train_step,
+    make_lm_train_step,
+    make_recsys_train_step,
+)
+
+__all__ = [
+    "init_adamw",
+    "adamw_update",
+    "make_lm_train_step",
+    "make_gnn_train_step",
+    "make_recsys_train_step",
+]

@@ -1,0 +1,78 @@
+"""AdamW with configurable moment dtype and fully sharded states.
+
+Moments inherit each parameter's sharding (same pytree structure → same
+PartitionSpecs), which is ZeRO-style optimizer-state sharding for free
+under GSPMD: with params FSDP-sharded over the batch axes, m/v shards
+follow.  ``moment_dtype='bfloat16'`` halves optimizer HBM for the 236B
+config (DESIGN.md §4); update math is always f32.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "init_adamw", "adamw_update"]
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def init_adamw(params, *, moment_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    opt: AdamWState,
+    *,
+    lr: float = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float = 1.0,
+):
+    step = opt.step + 1
+    stepf = step.astype(jnp.float32)
+
+    if grad_clip > 0:
+        gsq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+        )
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        gnorm = jnp.float32(0.0)
+        scale = jnp.float32(1.0)
+
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, step=step), gnorm

@@ -1,0 +1,137 @@
+"""Subgraph construction + beam search: correctness, invariants, recall."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    build_knn_graph,
+    build_subgraph,
+    find_medoid,
+    graph_stats,
+    prune_candidate_lists,
+)
+from repro.core.search import beam_search, brute_force_topk, recall_at_k
+
+
+def test_knn_graph_exact():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(300, 16)).astype(np.float32))
+    d, idx = build_knn_graph(x, 10, block_q=64)
+    # check rows against brute force (excluding self)
+    gt_d, gt_i = brute_force_topk(x, x, 11)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(gt_d[:, 1:]), rtol=1e-4, atol=1e-4)
+
+
+def test_knn_graph_n_valid_masks_pads():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(100, 8)).astype(np.float32)
+    pad = np.full((28, 8), 1e5, np.float32)
+    xp = jnp.asarray(np.concatenate([x, pad]))
+    d, idx = build_knn_graph(xp, 5, block_q=32, n_valid=jnp.int32(100))
+    idx = np.asarray(idx)[:100]
+    assert (idx < 100).all(), "padding rows must never be neighbors"
+
+
+def test_robust_prune_diversity():
+    """α-pruning: among selected neighbors, no candidate dominates another
+    (Vamana invariant: for selected a,b with d(p,a) ≤ d(p,b):
+    α·d(a,b) > d(p,b))."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(200, 8)).astype(np.float32))
+    cand = jnp.asarray(
+        np.stack([rng.choice(200, 32, replace=False) for _ in range(50)]).astype(np.int32)
+    )
+    nodes = jnp.arange(50, dtype=jnp.int32)
+    alpha = 1.2
+    adj = np.asarray(prune_candidate_lists(x, nodes, cand, 8, alpha=alpha, block=16))
+    xn = np.asarray(x)
+    for p in range(50):
+        sel = [v for v in adj[p] if v >= 0]
+        dp = {v: np.linalg.norm(xn[p] - xn[v]) for v in sel}
+        sel_sorted = sorted(sel, key=lambda v: dp[v])
+        for i, a in enumerate(sel_sorted):
+            for b in sel_sorted[i + 1 :]:
+                dab = np.linalg.norm(xn[a] - xn[b])
+                assert alpha * dab > dp[b] - 1e-4, (p, a, b)
+
+
+def test_build_subgraph_invariants():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(500, 16)).astype(np.float32))
+    adj = np.asarray(build_subgraph(x, 16))
+    assert adj.shape == (500, 16)
+    deg = (adj >= 0).sum(1)
+    assert deg.min() >= 1
+    stats = graph_stats(adj)
+    assert stats["n_components"] == 1, "reverse pass must connect the graph"
+    # no self loops / no out-of-range
+    assert (adj != np.arange(500)[:, None]).all()
+    assert adj.max() < 500
+
+
+@pytest.mark.parametrize("n,d", [(800, 16), (1500, 32)])
+def test_recall(n, d):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    adj = build_subgraph(x, 24)
+    q = jnp.asarray(rng.normal(size=(40, d)).astype(np.float32))
+    _, gt = brute_force_topk(x, q, 10)
+    res = beam_search(x, adj, q, find_medoid(x), k=10, beam_l=64, max_hops=96)
+    r = recall_at_k(np.asarray(res.ids), np.asarray(gt))
+    assert r >= 0.9, f"recall@10 {r}"
+
+
+def test_beam_search_returns_sorted_unique():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(400, 8)).astype(np.float32))
+    adj = build_subgraph(x, 12)
+    q = jnp.asarray(rng.normal(size=(10, 8)).astype(np.float32))
+    res = beam_search(x, adj, q, find_medoid(x), k=8, beam_l=32, max_hops=64)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    for i in range(10):
+        valid = ids[i][ids[i] >= 0]
+        assert len(set(valid.tolist())) == len(valid), "duplicates in results"
+        dd = dists[i][np.isfinite(dists[i])]
+        assert (np.diff(dd) >= -1e-6).all(), "results must be distance-sorted"
+
+
+@hypothesis.given(
+    n=st.integers(50, 400), d=st.integers(2, 24), r=st.integers(4, 24),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_property_build_degree_bound(n, d, r, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    adj = np.asarray(build_subgraph(x, r))
+    assert adj.shape == (n, r)
+    assert ((adj >= -1) & (adj < n)).all()
+    assert (adj != np.arange(n)[:, None]).all(), "no self loops"
+
+
+def test_vamana_refine_improves_or_preserves_recall():
+    from repro.core.graph import vamana_refine
+
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(1200, 24)).astype(np.float32))
+    # deliberately weak base graph: tiny candidate pool
+    adj0 = build_subgraph(x, 12, knn_k=14)
+    adj1 = vamana_refine(x, adj0, 12, beam_l=32, max_hops=32)
+    q = jnp.asarray(rng.normal(size=(30, 24)).astype(np.float32))
+    _, gt = brute_force_topk(x, q, 10)
+    med = find_medoid(x)
+    r0 = recall_at_k(
+        np.asarray(beam_search(x, adj0, q, med, k=10, beam_l=48, max_hops=64).ids),
+        np.asarray(gt),
+    )
+    r1 = recall_at_k(
+        np.asarray(beam_search(x, adj1, q, med, k=10, beam_l=48, max_hops=64).ids),
+        np.asarray(gt),
+    )
+    assert r1 >= r0 - 0.02, (r0, r1)
+    assert np.asarray(adj1).shape == (1200, 12)

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per the deliverable: shape/dtype sweeps + hypothesis property tests
+asserting allclose against ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(dtype))
+
+
+@pytest.mark.parametrize("m,n,d", [(8, 16, 4), (100, 257, 96), (256, 512, 128), (33, 1000, 100)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_pairwise_l2_sweep(m, n, d, dtype):
+    q = _arr((m, d), np.float32).astype(dtype)
+    db = _arr((n, d), np.float32).astype(dtype)
+    got = ops.pairwise_l2(q, db, impl="interpret")
+    want = ref.pairwise_l2_ref(q, db)
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("m,n,d,k", [(16, 64, 8, 4), (100, 1000, 96, 16), (64, 300, 32, 32)])
+def test_l2_topk_sweep(m, n, d, k):
+    q = _arr((m, d))
+    db = _arr((n, d))
+    gd, gi = ops.l2_topk(q, db, k, impl="interpret")
+    wd, wi = ref.l2_topk_ref(q, db, k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), rtol=1e-4, atol=1e-4)
+    # idx must match except where distances tie (random floats: no ties)
+    assert (np.asarray(gi) == np.asarray(wi)).mean() > 0.999
+
+
+def test_l2_topk_ascending_and_valid():
+    q = _arr((32, 16))
+    db = _arr((200, 16))
+    gd, gi = ops.l2_topk(q, db, 8, impl="interpret")
+    gd = np.asarray(gd)
+    gi = np.asarray(gi)
+    assert (np.diff(gd, axis=1) >= -1e-6).all(), "ascending distances"
+    assert ((gi >= 0) & (gi < 200)).all()
+
+
+@pytest.mark.parametrize("n,m,k,dsub", [(64, 4, 16, 8), (100, 8, 256, 12), (512, 16, 256, 8)])
+def test_pq_encode_sweep(n, m, k, dsub):
+    x = _arr((n, m * dsub))
+    cb = _arr((m, k, dsub))
+    got = ops.pq_encode_codes(x, cb, impl="interpret")
+    want = ref.pq_encode_ref(x, cb)
+    assert (np.asarray(got) == np.asarray(want)).mean() > 0.999
+
+
+@hypothesis.given(
+    m=st.integers(1, 64),
+    n=st.integers(2, 300),
+    d=st.integers(1, 160),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_pairwise_l2(m, n, d, seed):
+    q = _arr((m, d), seed=seed)
+    db = _arr((n, d), seed=seed + 1)
+    got = ops.pairwise_l2(q, db, impl="interpret")
+    want = ref.pairwise_l2_ref(q, db)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.given(
+    m=st.integers(1, 48),
+    n=st.integers(8, 200),
+    d=st.integers(2, 64),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_l2_topk(m, n, d, k, seed):
+    k = min(k, n)
+    q = _arr((m, d), seed=seed)
+    db = _arr((n, d), seed=seed + 1)
+    gd, gi = ops.l2_topk(q, db, k, impl="interpret")
+    wd, wi = ref.l2_topk_ref(q, db, k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), rtol=1e-4, atol=1e-3)
+
+
+def test_oracle_consistency_with_core():
+    """kernels.ref and core.kmeans compute the same distances."""
+    from repro.core.kmeans import pairwise_sq_l2
+
+    q = _arr((20, 12))
+    db = _arr((30, 12))
+    np.testing.assert_allclose(
+        np.asarray(pairwise_sq_l2(q, db)), np.asarray(ref.pairwise_l2_ref(q, db)),
+        rtol=1e-6,
+    )

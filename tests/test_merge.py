@@ -1,0 +1,81 @@
+"""Agglomerative merge: invariants + schedule properties."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.graph import build_subgraph, graph_stats
+from repro.core.merge import SubGraph, agglomerative_schedule, merge_pair, overlap_counts
+
+
+def _make_sub(x, ids, r=12):
+    sub = jnp.asarray(x[ids], jnp.float32)
+    adj = np.asarray(build_subgraph(sub, r))
+    return SubGraph(ids=np.asarray(ids, np.int64), adj=adj)
+
+
+def test_merge_pair_invariants():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(600, 12)).astype(np.float32)
+    ids_a = np.sort(rng.choice(600, 350, replace=False))
+    ids_b = np.sort(rng.choice(600, 350, replace=False))
+    ga, gb = _make_sub(x, ids_a), _make_sub(x, ids_b)
+    g = merge_pair(ga, gb, x)
+    # node set = union
+    np.testing.assert_array_equal(g.ids, np.union1d(ids_a, ids_b))
+    # degree bound + valid local indices
+    assert g.adj.shape[1] == max(ga.r, gb.r)
+    assert g.adj.max() < g.n and g.adj.min() >= -1
+    # disjoint-part rows carried over: a node only in A keeps its A neighbors
+    only_a = np.setdiff1d(ids_a, ids_b)
+    pos = {int(v): i for i, v in enumerate(g.ids)}
+    pos_a = {int(v): i for i, v in enumerate(ga.ids)}
+    overlap = set(np.intersect1d(ids_a, ids_b).tolist())
+    checked = 0
+    for v in only_a[:50]:
+        row_a = set(
+            int(ga.ids[j]) for j in ga.adj[pos_a[int(v)]] if j >= 0
+        )
+        row_m = set(int(g.ids[j]) for j in g.adj[pos[int(v)]] if j >= 0)
+        # carried over unless a backlink stitched an overlap node in
+        if not (row_m - row_a):
+            assert row_a == row_m or row_a >= row_m
+            checked += 1
+    assert checked > 0
+
+
+def test_merge_connectivity_improves():
+    """Merging two halves of a dataset yields one connected graph."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(500, 10)).astype(np.float32)
+    # overlapping halves (with shared middle band → bridge nodes)
+    ids_a = np.arange(0, 320)
+    ids_b = np.arange(180, 500)
+    g = merge_pair(_make_sub(x, ids_a), _make_sub(x, ids_b), x)
+    assert g.n == 500
+    stats = graph_stats(g.adj)
+    assert stats["n_components"] == 1
+
+
+def test_overlap_counts():
+    members = [np.array([0, 1, 2, 3]), np.array([2, 3, 4]), np.array([9])]
+    ov = overlap_counts(members)
+    assert ov[0, 1] == 2 and ov[0, 2] == 0 and ov[1, 2] == 0
+    assert (ov == ov.T).all()
+
+
+def test_agglomerative_schedule_shape():
+    sizes = np.array([100, 90, 80, 70, 60])
+    ov = np.zeros((5, 5), np.int64)
+    ov[0, 1] = ov[1, 0] = 50  # these two should merge first
+    rounds = agglomerative_schedule(sizes, ov)
+    # 5 leaves → 4 merges total, ⌈log2⌉ rounds ≥ 3
+    assert sum(len(r) for r in rounds) == 4
+    assert rounds[0][0] == (0, 1), "highest-overlap pair first"
+    # every node consumed exactly once
+    used = [n for r in rounds for p in r for n in p]
+    assert len(used) == len(set(used))
+
+
+def test_schedule_single():
+    assert agglomerative_schedule(np.array([10]), np.zeros((1, 1))) == []

@@ -1,0 +1,161 @@
+"""Algorithm 1 — oracle parity + invariants (unit + hypothesis property)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kmeans import kmeans_fit
+from repro.core.partition import (
+    PartitionConfig,
+    assign_chunk,
+    assign_reference,
+    estimate_num_partitions,
+    partition_all,
+)
+
+
+def _centroids(x, phi, seed=1):
+    return np.asarray(
+        kmeans_fit(jax.random.PRNGKey(seed), jnp.asarray(x), phi).centroids
+    )
+
+
+def test_phi_formula():
+    assert estimate_num_partitions(10_000, 1000, 4) == 40
+    assert estimate_num_partitions(1, 1000, 4) == 1
+    assert estimate_num_partitions(1000, 999, 2) == 3
+
+
+def test_reference_matches_figure_semantics():
+    """Figure 1(a): P assigned to nearest; 2nd nearest iff d2 ≤ ε·d1."""
+    c = np.array([[0.0, 0.0], [1.0, 0.0], [10.0, 0.0]], np.float32)
+    x = np.array([[0.4, 0.0]], np.float32)  # d = [0.4, 0.6, 9.6]
+    a, sizes = assign_reference(x, c, omega=3, eps=1.6, gamma=10)
+    # avg after first = 0.4; 0.6 <= 1.6*0.4 → accept; avg=0.5; 9.6 > 0.8 → stop
+    assert a[0] == [0, 1]
+    a2, _ = assign_reference(x, c, omega=3, eps=1.4, gamma=10)
+    # 0.6 > 1.4*0.4=0.56 → only nearest
+    assert a2[0] == [0]
+
+
+def test_reference_overload_reset():
+    """Line 17: when the nearest set is full the walk resets the average."""
+    c = np.array([[0.0, 0.0], [1.0, 0.0], [2.0, 0.0]], np.float32)
+    x = np.array([[0.1, 0.0], [0.05, 0.0]], np.float32)
+    a, sizes = assign_reference(x, c, omega=1, eps=1.01, gamma=1)
+    # vector 0 fills set 0; vector 1 must land somewhere else (reset → set 1)
+    assert a[0] == [0]
+    assert a[1] == [1]
+    assert sizes.max() <= 1
+
+
+def test_batched_matches_reference_when_uncontended():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 8)).astype(np.float32)
+    cent = _centroids(x, 12)
+    ref, ref_sizes = assign_reference(x, cent, omega=3, eps=1.5, gamma=500)
+    res = partition_all(
+        x, cent, PartitionConfig(gamma=500, omega=3, eps=1.5, chunk_size=128)
+    )
+    # no capacity pressure → chunked result must equal the oracle exactly
+    for i, lst in enumerate(ref):
+        got = sorted(res.assign_idx[i][res.assign_idx[i] >= 0].tolist())
+        assert got == sorted(lst)
+    np.testing.assert_array_equal(res.sizes, ref_sizes)
+
+
+@pytest.mark.parametrize("skew", [0.0, 1.5])
+@pytest.mark.parametrize("eps", [1.2, 1.8])
+def test_invariants_under_pressure(skew, eps):
+    rng = np.random.default_rng(3)
+    n = 1200
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    if skew:
+        x[: int(n * 0.8)] *= 0.02  # dense ball forces overload
+    gamma, omega = 100, 3
+    phi = estimate_num_partitions(n, gamma, omega)
+    cent = _centroids(x, phi)
+    res = partition_all(
+        x, cent, PartitionConfig(gamma=gamma, omega=omega, eps=eps, chunk_size=256)
+    )
+    counts = (res.assign_idx >= 0).sum(1)
+    assert (counts >= 1).all(), "every vector lands somewhere"
+    assert (counts <= omega).all(), "Ω bound"
+    assert res.sizes.max() <= gamma, "Γ bound (overload-aware)"
+    assert res.sizes.sum() == counts.sum()
+    # adaptive overlap stays below the fixed-Ω baseline
+    assert res.avg_overlap <= omega
+
+
+def test_assign_chunk_valid_mask():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(64, 4)).astype(np.float32)
+    cent = rng.normal(size=(8, 4)).astype(np.float32)
+    valid = np.zeros(64, bool)
+    valid[:40] = True
+    res = assign_chunk(
+        jnp.asarray(x), jnp.asarray(cent), jnp.zeros(8, jnp.int32),
+        jnp.asarray(valid), omega=2, eps=1.5, gamma=1000,
+    )
+    accept = np.asarray(res.accept)
+    assert accept[40:].sum() == 0, "padding rows must not claim capacity"
+    assert int(np.asarray(res.added).sum()) == accept[:40].sum()
+
+
+@hypothesis.given(
+    n=st.integers(50, 300),
+    d=st.integers(2, 12),
+    omega=st.integers(2, 5),
+    eps=st.floats(1.05, 3.0),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_capacity_and_coverage(n, d, omega, eps, seed):
+    """Property: for any data/params, Γ is never exceeded and every vector
+    is assigned to between 1 and Ω subsets."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, d)) * rng.uniform(0.02, 2.0)).astype(np.float32)
+    gamma = max(10, n // rng.integers(2, 8))
+    phi = estimate_num_partitions(n, gamma, omega)
+    cent = x[rng.choice(n, size=phi, replace=False)] + rng.normal(
+        size=(phi, d)
+    ).astype(np.float32) * 0.01
+    res = partition_all(
+        x, cent.astype(np.float32),
+        PartitionConfig(gamma=gamma, omega=omega, eps=float(eps), chunk_size=64),
+    )
+    counts = (res.assign_idx >= 0).sum(1)
+    assert res.sizes.max() <= gamma
+    assert (counts >= 1).all() and (counts <= omega).all()
+
+
+@hypothesis.given(
+    n=st.integers(20, 120),
+    omega=st.integers(2, 4),
+    eps=st.floats(1.1, 2.5),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_walk_prefix_monotone(n, omega, eps, seed):
+    """Property (sequential oracle): accepted distances are non-decreasing
+    and the ε test holds at each acceptance step."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 6)).astype(np.float32)
+    phi = max(omega + 1, n // 10)
+    cent = rng.normal(size=(phi, 6)).astype(np.float32)
+    assigns, _ = assign_reference(x, cent, omega=omega, eps=float(eps), gamma=n)
+    for v, lst in enumerate(assigns):
+        d = np.sqrt(((x[v][None] - cent) ** 2).sum(-1))
+        dists = [d[i] for i in lst]
+        assert all(dists[i] <= dists[i + 1] + 1e-6 for i in range(len(dists) - 1))
+        acc = 0.0
+        for t, dist in enumerate(dists):
+            if t == 0:
+                acc = dist
+                continue
+            avg = acc / t
+            assert dist <= eps * avg + 1e-5
+            acc += dist

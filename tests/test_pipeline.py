@@ -1,0 +1,120 @@
+"""End-to-end SOGAIC build: recall, checkpoint resume, fault injection."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core.pipeline import SOGAICBuilder, SOGAICConfig
+from repro.core.search import brute_force_topk, recall_at_k
+from repro.distributed.cluster_sim import SimulatedCluster
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(3000, 16)).astype(np.float32)
+    q = rng.normal(size=(40, 16)).astype(np.float32)
+    _, gt = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+    return x, q, np.asarray(gt)
+
+
+CFG = SOGAICConfig(
+    gamma=700, omega=3, eps=1.6, chunk_size=1024, r=20, n_workers=4,
+    sample_size=1500, kmeans_iters=12,
+)
+
+
+def test_build_and_search(data, tmp_path):
+    x, q, gt = data
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    idx, rep = SOGAICBuilder(CFG).build(x, ckpt=ckpt)
+    assert rep.phi == -(-3 * 3000 // 700)
+    assert rep.graph["n_components"] == 1
+    assert rep.avg_overlap <= CFG.omega
+    ids, _ = idx.search(q, 10, beam_l=64)
+    r = recall_at_k(ids, gt)
+    assert r >= 0.9, f"recall {r}"
+
+    # resume: all stages checkpointed → near-instant, same graph
+    idx2, rep2 = SOGAICBuilder(CFG).build(x, ckpt=ckpt)
+    np.testing.assert_array_equal(idx.adj, idx2.adj)
+    assert sum(rep2.timings.values()) < sum(rep.timings.values()) / 2
+
+    # index round-trip through the checkpoint
+    from repro.core.pipeline import SOGAICIndex
+
+    idx3 = SOGAICIndex.load(ckpt)
+    ids3, _ = idx3.search(q, 10, beam_l=64)
+    assert recall_at_k(ids3, gt) >= 0.9
+
+
+def test_build_with_failures_and_stragglers(data):
+    """Fault-injected cluster: the build must complete with full quality
+    despite worker deaths mid-task and 4× stragglers (retries + speculative
+    duplicates handle both)."""
+    x, q, gt = data
+    cluster = SimulatedCluster(
+        4, fail_prob=0.2, max_failures=4, straggler_prob=0.2,
+        straggler_slowdown=4.0, seed=7,
+    )
+    idx, rep = SOGAICBuilder(CFG).build(x, runner_wrapper=cluster.wrap)
+    assert rep.graph["n_components"] == 1
+    ids, _ = idx.search(q, 10, beam_l=64)
+    assert recall_at_k(ids, gt) >= 0.9
+    assert cluster._failures >= 1, "the simulator must have injected failures"
+
+
+def test_build_single_partition():
+    """N ≤ Γ → one subset, no merge stage."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(400, 8)).astype(np.float32)
+    cfg = SOGAICConfig(gamma=1600, omega=2, eps=1.5, chunk_size=256, r=12,
+                       sample_size=400, n_workers=2)
+    idx, rep = SOGAICBuilder(cfg).build(x)
+    assert rep.phi == 1
+    assert rep.merge_makespan == 0.0
+    assert idx.adj.shape == (400, 12)
+
+
+def test_pq_fused_encoding(data, tmp_path):
+    x, q, gt = data
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, pq_m=4)
+    ckpt = CheckpointManager(str(tmp_path / "pq"))
+    idx, rep = SOGAICBuilder(cfg).build(x, ckpt=ckpt)
+    assert idx.pq_codes is not None and idx.pq_codes.shape == (3000, 4)
+    # codes must match a direct (non-fused) encode — encoded exactly once
+    from repro.core.pq import pq_encode
+
+    codes = np.asarray(pq_encode(jnp.asarray(x, jnp.float32), idx.pq_codebook))
+    np.testing.assert_array_equal(idx.pq_codes, codes)
+
+
+def test_centroid_routed_entries_on_clustered_data():
+    """The beyond-paper serving fix: single-medoid entry collapses on
+    cluster-structured data; centroid-routed entries recover recall
+    (EXPERIMENTS.md §Paper-reproduction, isd3b)."""
+    from repro.data.datasets import DATASETS
+    from repro.core.search import beam_search
+    from repro.core.graph import find_medoid
+
+    spec = DATASETS["isd3b"]
+    n = 3000
+    x = spec.generate(n + 50, seed=2)
+    x, q = x[:n], x[n : n + 50]
+    gt = np.asarray(brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)[1])
+    cfg = SOGAICConfig(gamma=n // 6, omega=4, eps=1.8, chunk_size=1024, r=20,
+                       n_workers=4, sample_size=n, kmeans_iters=12)
+    idx, rep = SOGAICBuilder(cfg).build(x)
+    routed_ids, _ = idx.search(q, 10, beam_l=64)
+    r_routed = recall_at_k(routed_ids, gt)
+    # medoid-only search on the same graph
+    res = beam_search(
+        jnp.asarray(x, jnp.float32), jnp.asarray(idx.adj), jnp.asarray(q),
+        find_medoid(jnp.asarray(x, jnp.float32)), k=10, beam_l=64, max_hops=96,
+    )
+    r_medoid = recall_at_k(np.asarray(res.ids), gt)
+    assert r_routed >= r_medoid, (r_routed, r_medoid)
+    assert r_routed >= 0.5, f"routed recall {r_routed}"

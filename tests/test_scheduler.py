@@ -1,0 +1,115 @@
+"""LPT scheduling, dynamic executor: failures, stragglers, elasticity."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (
+    ClusterScheduler,
+    ScheduledTask,
+    fit_linear_cost,
+    lpt_schedule,
+    makespan_lower_bound,
+)
+from repro.distributed.cluster_sim import SimulatedCluster
+
+
+def test_lpt_basic():
+    costs = [7, 5, 4, 3, 2, 2]
+    assignment, makespan = lpt_schedule(costs, 3)
+    assert sorted(t for a in assignment for t in a) == list(range(6))
+    # LPT gives 9 on this instance (optimum is 8) — within the 4/3 bound
+    assert makespan == 9
+
+
+@hypothesis.given(
+    costs=st.lists(st.floats(0.1, 100.0), min_size=1, max_size=60),
+    m=st.integers(1, 8),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_property_lpt_bound(costs, m):
+    """LPT ≤ (4/3 − 1/(3m))·OPT; OPT ≥ max(mean load, max cost)."""
+    _, makespan = lpt_schedule(costs, m)
+    lb = makespan_lower_bound(costs, m)
+    assert makespan <= (4 / 3 - 1 / (3 * m)) * lb + max(costs) + 1e-6
+    assert makespan >= lb - 1e-6
+
+
+def test_cluster_completes_all():
+    sched = ClusterScheduler(4)
+    tasks = [ScheduledTask(i, cost=float(i % 5 + 1)) for i in range(20)]
+    done = []
+    res = sched.run(
+        tasks, lambda t, w: t.cost, on_complete=lambda t, w, c: done.append(t.task_id)
+    )
+    assert res["n_completed"] == 20
+    assert sorted(t for t in done if t >= 0) == list(range(20))
+
+
+def test_failed_workers_retry():
+    cluster = SimulatedCluster(4, fail_prob=0.3, max_failures=3, seed=1)
+    sched = ClusterScheduler(4, max_attempts=8)
+    tasks = [ScheduledTask(i, cost=1.0) for i in range(12)]
+    res = sched.run(tasks, cluster.cost_runner())
+    assert res["n_completed"] == 12
+    fails = [e for e in sched.log if e["ev"] == "worker_failed"]
+    assert len(fails) == 3, "simulator injected exactly max_failures deaths"
+
+
+def test_straggler_speculation():
+    cluster = SimulatedCluster(
+        4, straggler_prob=0.4, straggler_slowdown=50.0, seed=3
+    )
+    sched = ClusterScheduler(4, straggler_factor=2.0)
+    tasks = [ScheduledTask(i, cost=1.0) for i in range(8)]
+    res = sched.run(tasks, cluster.cost_runner())
+    assert res["n_completed"] == 8
+    spec = [e for e in sched.log if e["ev"] == "speculate"]
+    assert spec, "stragglers must trigger speculative duplicates"
+    # speculation must beat waiting for the 50× straggler
+    assert res["makespan"] < 50.0
+
+
+def test_elastic_add_worker():
+    sched = ClusterScheduler(1)
+    sched.add_worker(speed=2.0)
+    tasks = [ScheduledTask(i, cost=1.0) for i in range(8)]
+    res = sched.run(tasks, lambda t, w: t.cost)
+    loads = res["per_worker_load"]
+    assert set(loads) == {0, 1}, "new worker must receive work"
+    assert res["makespan"] < 8.0
+
+
+def test_remove_worker_mid_stream():
+    sched = ClusterScheduler(3)
+    removed = []
+
+    def on_complete(task, wid, clock):
+        if len(removed) == 0:
+            sched.remove_worker(2)
+            removed.append(2)
+
+    tasks = [ScheduledTask(i, cost=1.0) for i in range(10)]
+    res = sched.run(tasks, lambda t, w: t.cost, on_complete=on_complete)
+    assert res["n_completed"] == 10
+
+
+def test_priority_order():
+    """Higher-priority (higher-overlap merge) tasks launch first."""
+    sched = ClusterScheduler(1, speculation=False)
+    order = []
+    tasks = [
+        ScheduledTask(0, cost=1.0, priority=0.0),
+        ScheduledTask(1, cost=1.0, priority=9.0),
+        ScheduledTask(2, cost=1.0, priority=5.0),
+    ]
+    sched.run(tasks, lambda t, w: (order.append(t.task_id), t.cost)[1])
+    assert order == [1, 2, 0]
+
+
+def test_fit_linear_cost():
+    sizes = np.array([100, 200, 400, 800])
+    times = 0.5 + 0.01 * sizes
+    c0, c1 = fit_linear_cost(sizes, times)
+    assert abs(c0 - 0.5) < 1e-6 and abs(c1 - 0.01) < 1e-9

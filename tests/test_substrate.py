@@ -1,0 +1,140 @@
+"""Checkpoint manager, data pipeline, PQ, k-means, optimizer."""
+
+import os
+import threading
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.kmeans import kmeans_fit, pairwise_sq_l2
+from repro.core.pq import adc_distances, adc_lookup_tables, pq_decode, pq_encode, pq_train
+from repro.data import ChunkLoader, estimate_lid, generate_dataset, make_planted_manifold
+from repro.training.optimizer import adamw_update, init_adamw
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = CheckpointManager(str(tmp_path))
+    a = np.random.default_rng(0).normal(size=(10, 3))
+    ck.save_array("a", a)
+    np.testing.assert_array_equal(ck.load_array("a"), a)
+    ck.save_arrays("z", x=a, y=a * 2)
+    z = ck.load_arrays("z")
+    np.testing.assert_array_equal(z["y"], a * 2)
+    ck.save_json("meta", {"k": 1})
+    assert ck.load_json("meta") == {"k": 1}
+    ck.mark_stage("s1", foo=3)
+    assert ck.stage_done("s1") and not ck.stage_done("s2")
+    # a fresh manager sees the same manifest (atomic persistence)
+    ck2 = CheckpointManager(str(tmp_path))
+    assert ck2.stage_done("s1") and ck2.stage_meta("s1")["foo"] == 3
+
+
+def test_checkpoint_async(tmp_path):
+    ck = CheckpointManager(str(tmp_path), async_writes=True)
+    for i in range(5):
+        ck.save_array(f"a{i}", np.full((4,), i))
+    ck.close()
+    for i in range(5):
+        np.testing.assert_array_equal(ck.load_array(f"a{i}"), np.full((4,), i))
+
+
+def test_chunk_loader_sharded():
+    x = np.arange(100 * 4, dtype=np.float32).reshape(100, 4)
+    seen = []
+    for host in range(2):
+        for ci, lo, hi, chunk, valid in ChunkLoader(x, 16, host_id=host, n_hosts=2):
+            seen.append((lo, hi))
+            np.testing.assert_array_equal(chunk[: hi - lo], x[lo:hi])
+            assert valid[: hi - lo].all()
+            assert not valid[hi - lo :].any()
+    covered = sorted(seen)
+    assert covered[0][0] == 0 and covered[-1][1] == 100
+    total = sum(hi - lo for lo, hi in seen)
+    assert total == 100
+
+
+def test_lid_tracks_intrinsic_dim():
+    lo = make_planted_manifold(3000, 64, intrinsic_dim=4, seed=0)
+    hi = make_planted_manifold(3000, 64, intrinsic_dim=24, seed=0)
+    assert estimate_lid(lo, sample=256) < estimate_lid(hi, sample=256)
+
+
+def test_datasets_registry():
+    x, q = generate_dataset("sift1m", n_override=500, n_query=16)
+    assert x.shape == (500, 128) and q.shape == (16, 128)
+
+
+def test_kmeans_clusters():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(5, 8)) * 10
+    x = (centers[rng.integers(0, 5, 1000)] + rng.normal(size=(1000, 8)) * 0.1).astype(
+        np.float32
+    )
+    st_ = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(x), 5)
+    assert float(st_.inertia) < 0.5
+    # recovered centroids ≈ true centers (match by nearest)
+    c = np.asarray(st_.centroids)
+    d = ((c[:, None, :] - centers[None]) ** 2).sum(-1)
+    assert (d.min(1) < 1.0).all()
+
+
+def test_kmeans_minibatch():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(2000, 4)).astype(np.float32)
+    st_ = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(x), 8, batch_size=256, max_iters=30)
+    assert np.isfinite(float(st_.inertia))
+
+
+def test_pq_roundtrip_and_adc():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2000, 32)).astype(np.float32))
+    cb = pq_train(jax.random.PRNGKey(0), x, 8, iters=10)
+    codes = pq_encode(x, cb)
+    assert codes.shape == (2000, 8) and codes.dtype == jnp.uint8
+    xr = pq_decode(codes, cb)
+    mse = float(jnp.mean((xr - x) ** 2))
+    assert mse < float(jnp.mean(x**2)) * 0.6, "PQ must reduce energy error"
+    q = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    luts = adc_lookup_tables(q, cb)
+    approx = np.asarray(adc_distances(luts, codes))
+    exact = np.asarray(pairwise_sq_l2(q, x))
+    corr = np.corrcoef(approx.ravel(), exact.ravel())[0, 1]
+    assert corr > 0.8, f"ADC distances must track exact ({corr})"
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([4.0, -3.0])}
+    opt = init_adamw(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(params, grads, opt, lr=5e-2, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    opt = init_adamw(params, moment_dtype="bfloat16")
+    assert opt.m["w"].dtype == jnp.bfloat16
+    params, opt, gnorm = adamw_update(params, {"w": jnp.ones((8,), jnp.bfloat16)}, opt)
+    assert params["w"].dtype == jnp.bfloat16
+    assert np.isfinite(float(gnorm))
+
+
+@hypothesis.given(
+    n=st.integers(20, 200), d=st.integers(2, 16), m=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 1000),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_property_pq_codes_in_range(n, d, m, seed):
+    d = d * m  # divisible
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(max(n, 300), d)).astype(np.float32))
+    cb = pq_train(jax.random.PRNGKey(seed), x, m, n_codes=16, iters=3)
+    codes = np.asarray(pq_encode(x[:n], cb))
+    assert codes.shape == (n, m)
+    assert (codes < 16).all()
